@@ -1,0 +1,40 @@
+"""Paper Table 1: device compute comparison + calibration findings.
+
+Emits the rated vs calibrated-effective rates (the reproduction-critical
+discovery that Table 1 ratings don't predict the paper's own timings), plus
+this host's measured matmul throughput as a sanity row.
+"""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.calibrate import calibrated_profiles
+from repro.hw.specs import PROFILES, TPU_V5E
+
+
+def main():
+    profs = calibrated_profiles()
+    rated = {"xeon": 0.061e12, "mac": 0.9e12, "iphone11": 0.63e12,
+             "iphone16": 1.907e12}
+    rows = []
+    for name, p in profs.items():
+        rows.append([name, 0, f"rated={rated[name]/1e9:.0f}GF/s",
+                     f"calibrated={p.flops/1e9:.0f}GF/s",
+                     f"efficiency={p.flops/rated[name]:.2f}"])
+    rows.append(["tpu-v5e-target", 0, f"rated={TPU_V5E.flops/1e12:.0f}TF/s",
+                 f"hbm={TPU_V5E.mem_bw/1e9:.0f}GB/s",
+                 f"ici={TPU_V5E.link_bw/1e9:.0f}GB/s/link"])
+
+    # measured local matmul throughput (this container's CPU)
+    import jax
+    import jax.numpy as jnp
+    n = 1024
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    us = timeit(lambda: jax.block_until_ready(f(a)), n=5)
+    gflops = 2 * n ** 3 / (us / 1e6) / 1e9
+    rows.append(["this-host-cpu", round(us, 1), f"matmul={gflops:.1f}GF/s", "", ""])
+    emit("devices", rows, ["name", "us_per_call", "d1", "d2", "d3"])
+
+
+if __name__ == "__main__":
+    main()

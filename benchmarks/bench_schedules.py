@@ -1,0 +1,25 @@
+"""Paper Fig. 3: GPipe vs hybrid schedule accounting (+ rendered tables)."""
+from benchmarks.common import emit
+from repro.core import schedules as S
+
+
+def main():
+    rows = []
+    for s, m in [(2, 8), (4, 8), (4, 16), (8, 16), (16, 16)]:
+        g = S.schedule_stats(S.gpipe_table(s, m), s, m)
+        h = S.schedule_stats(S.hybrid_table(s, m), s, m)
+        rows.append([f"S{s}_M{m}", 0,
+                     f"gpipe_ticks={g['ticks']}",
+                     f"hybrid_ticks={h['ticks']}",
+                     f"gpipe_bubble={g['bubble_fraction']:.3f}",
+                     f"hybrid_bubble={h['bubble_fraction']:.3f}"])
+    emit("schedules", rows,
+         ["name", "us_per_call", "d1", "d2", "d3", "d4"])
+    print("\n[paper Fig.3, S=2 M=4] hybrid (last stage fused F+B):")
+    print(S.render(S.hybrid_table(2, 4)))
+    print("[gpipe]:")
+    print(S.render(S.gpipe_table(2, 4)))
+
+
+if __name__ == "__main__":
+    main()

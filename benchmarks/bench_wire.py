@@ -1,0 +1,26 @@
+"""Wire codec / checkpoint throughput (the paper's Fig. 2 protocol at the
+sizes a checkpoint shard actually moves)."""
+import io
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.wire import codec
+
+
+def main():
+    rows = []
+    for mb in [1, 16, 64]:
+        arr = np.random.default_rng(0).standard_normal(
+            (mb * 1024 * 1024 // 4,)).astype(np.float32)
+        data = codec.dumps({"a": arr})
+        us_enc = timeit(lambda: codec.dumps({"a": arr}), n=3)
+        us_dec = timeit(lambda: codec.loads(data), n=3)
+        rows.append([f"pytree_{mb}MB", round(us_enc, 0),
+                     f"encode={mb/(us_enc/1e6):.0f}MB/s",
+                     f"decode={mb/(us_dec/1e6):.0f}MB/s"])
+    emit("wire", rows, ["name", "us_per_call", "d1", "d2"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def emit(name: str, rows, header=None):
+    """Print ``name,us_per_call,derived`` CSV rows + save to experiments/."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    lines = []
+    for row in rows:
+        lines.append(",".join(str(x) for x in row))
+    text = "\n".join(lines)
+    (OUT_DIR / f"{name}.csv").write_text(
+        (",".join(header) + "\n" if header else "") + text + "\n")
+    for line in lines:
+        print(f"{name},{line}")
+
+
+def timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6        # us

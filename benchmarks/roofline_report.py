@@ -1,0 +1,62 @@
+"""§Roofline: the three-term table over every dry-run cell + §Perf hints.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), computes
+compute/memory/collective seconds per (arch × shape × mesh), marks the
+dominant term, the 6·N·D useful-work ratio, and emits both CSV and the
+markdown table embedded in EXPERIMENTS.md.
+"""
+from pathlib import Path
+
+from benchmarks.common import OUT_DIR, emit
+from repro.analysis.roofline import (best_rows, improvement_hint, load_cells)
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def markdown_table(rows):
+    md = ["| arch | shape | mesh | strategy | compute s | memory s | "
+          "collective s | dominant | peak GB/dev | 6ND/HLO | note |",
+          "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.status == "ok":
+            md.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | {r.strategy} "
+                f"| {r.compute_s:.4f} | {r.memory_s:.4f} "
+                f"| {r.collective_s:.4f} | **{r.dominant}** "
+                f"| {r.peak_gb:.1f} | {r.useful_ratio:.2f} "
+                f"| {improvement_hint(r)[:60]} |")
+        else:
+            md.append(f"| {r.arch} | {r.shape} | {r.mesh} | - | - | - | - "
+                      f"| {r.status.upper()} | - | - | {r.note[:60]} |")
+    return "\n".join(md)
+
+
+def main():
+    cells = load_cells(ART)
+    if not cells:
+        print("roofline,no_dryrun_artifacts,0,run repro.launch.dryrun first")
+        return
+    rows = sorted(best_rows(cells).values(),
+                  key=lambda r: (r.arch, r.shape, r.mesh))
+    csv = []
+    for r in rows:
+        csv.append([f"{r.arch}__{r.shape}__{r.mesh}", 
+                    round(r.step_s * 1e6, 1),
+                    r.status, r.strategy, round(r.compute_s, 5),
+                    round(r.memory_s, 5), round(r.collective_s, 5),
+                    r.dominant, round(r.peak_gb, 2),
+                    round(r.useful_ratio, 3)])
+    emit("roofline", csv,
+         ["cell", "us_step", "status", "strategy", "compute_s", "memory_s",
+          "collective_s", "dominant", "peak_gb_dev", "useful_ratio"])
+    md = markdown_table(rows)
+    (OUT_DIR / "roofline.md").write_text(md + "\n")
+    ok = [r for r in rows if r.status == "ok"]
+    doms = {}
+    for r in ok:
+        doms[r.dominant] = doms.get(r.dominant, 0) + 1
+    print(f"roofline,summary,0,cells_ok={len(ok)},dominant_split={doms}")
+
+
+if __name__ == "__main__":
+    main()

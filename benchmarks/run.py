@@ -1,0 +1,43 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [names...]
+
+Emits ``name,us_per_call,derived...`` CSV lines (+ files under
+experiments/bench/).
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
+                        bench_schedules, bench_thermal, bench_tool_parallel,
+                        bench_wire, roofline_report)
+
+ALL = {
+    "devices": bench_devices.main,          # paper Table 1
+    "pipeline": bench_pipeline.main,        # paper §4.1 / Fig. 5 / A.1
+    "schedules": bench_schedules.main,      # paper Fig. 3
+    "thermal": bench_thermal.main,          # paper §4.2 / Fig. 6
+    "tool_parallel": bench_tool_parallel.main,  # paper §4.3 / Fig. 7-8
+    "wire": bench_wire.main,                # paper Fig. 2 protocol
+    "kernels": bench_kernels.main,          # Pallas kernel budgets
+    "roofline": roofline_report.main,       # §Roofline table from dry-run
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    failed = []
+    for name in names:
+        print(f"# === bench:{name} ===")
+        try:
+            ALL[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,87 @@
+"""Fault tolerance + thermal mitigation demo (paper §4.2/§5.2):
+training hits an injected worker failure, restarts from the async
+checkpoint, then a thermal throttle triggers the monitor's state machine
+and the policies react (swap / duty-cycle / rebalance).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.core.calibrate import calibrated_profiles, resnet_costs
+from repro.data.synthetic import DataConfig, TokenPipeline
+from repro.models.api import build_model
+from repro.optim import adamw
+from repro.runtime.elastic import DutyCyclePolicy, RebalancePolicy, SwapPolicy
+from repro.runtime.faults import FaultPlan
+from repro.runtime.monitor import ThermalMonitor
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    rcfg = RunConfig(param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+    model = build_model(cfg, rcfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p, b: model.loss(p, b), has_aux=True)(params, batch)
+        p2, o2, st = adamw.update(opt_cfg, g, opt, params)
+        return p2, o2, dict(loss=loss, **st)
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    pipe = TokenPipeline(dcfg)
+
+    def data_iter(start):
+        def gen():
+            s = start
+            while True:
+                yield {"tokens": jnp.asarray(pipe.batch(s)["tokens"])}
+                s += 1
+        return iter(gen())
+
+    shutil.rmtree("/tmp/repro_elastic", ignore_errors=True)
+    faults = FaultPlan(fail_at={23: "worker0"},
+                       throttle={"worker0": (30, 1.15, 4)})
+    tr = Trainer(TrainerConfig(total_steps=50, ckpt_every=10,
+                               ckpt_dir="/tmp/repro_elastic", log_every=10),
+                 step_fn,
+                 lambda: (model.init(jax.random.key(0)),
+                          adamw.init(model.init(jax.random.key(0)))),
+                 data_iter, fault_plan=faults)
+    out = tr.run()
+    print(f"[elastic] survived {tr.restarts} failure(s); "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    states = [h["thermal"] for h in out["history"]]
+    print(f"[elastic] thermal states: {'->'.join(dict.fromkeys(states))}")
+
+    # mitigation policies on the paper's calibrated 2-device pipeline
+    costs = resnet_costs()
+    profs = calibrated_profiles()
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    for t in [1.0, 1.0, 1.12, 1.12]:
+        mon.observe("phone", t)
+    for pol, act in [("swap", SwapPolicy(["spare0"]).step(mon)),
+                     ("duty", DutyCyclePolicy().step(mon)),
+                     ("rebalance", RebalancePolicy(
+                         costs, [profs["xeon"], profs["iphone11"]],
+                         efficiency=1.0).step(mon, ["host", "phone"]))]:
+        print(f"[elastic] policy {pol}: {[a.kind for a in act]} "
+              f"{[a.detail for a in act]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Checkpoint store built on the paper's tensor wire protocol (Fig. 2).
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json        step, mesh, partition plan, data cursor, rng,
+                             leaf index (path -> file, shape, dtype), crc
+        shard_<k>.bin        wire-codec pytree frames (one per host in a real
+                             fleet; single-host here writes shard_0)
+
+Async: ``save_async`` snapshots to host RAM synchronously (donation-safe)
+and writes to disk on a background thread — training continues immediately
+(the paper's host kept computing while tensors streamed to the phone; same
+overlap idea at the checkpoint layer).
+
+Restore supports RESHARDING: arrays come back as host numpy and are
+device_put against whatever sharding the (possibly different) mesh wants —
+this is what elastic shrink/grow rides on.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.wire import codec
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: Path, step: int, tree: Any, extra: Optional[dict] = None,
+         keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    out = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    with open(tmp / "shard_0.bin", "wb") as f:
+        n = codec.encode_pytree(flat, f)
+    manifest = {
+        "step": step,
+        "format": "repro-wire-v1",
+        "bytes": n,
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if out.exists():
+        import shutil
+
+        shutil.rmtree(out)
+    tmp.rename(out)                                   # atomic publish
+    _gc(ckpt_dir, keep)
+    return out
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        import shutil
+
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: Path) -> Optional[int]:
+    steps = sorted(p.name for p in Path(ckpt_dir).glob("step_*") if p.is_dir())
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: Path, step: Optional[int] = None,
+            like: Any = None, shardings: Any = None) -> (Any, dict):
+    """Returns (tree, manifest_extra).  ``like`` gives the target structure;
+    ``shardings`` (optional pytree) reshard-places each leaf."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    src = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    with open(src / "shard_0.bin", "rb") as f:
+        flat = codec.decode_pytree(f)
+    if like is None:
+        return flat, manifest.get("extra", {})
+    leaves_like = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    flat_shard = None
+    if shardings is not None:
+        flat_shard = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    for i, (path, leaf) in enumerate(leaves_like[0]):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        arr = flat[name]
+        want_dtype = np.asarray(leaf).dtype if hasattr(leaf, "dtype") else arr.dtype
+        arr = arr.astype(want_dtype) if str(arr.dtype) != str(want_dtype) else arr
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[i])
+        out_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(leaves_like[1], out_leaves)
+    return tree, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, persist on a daemon thread."""
+
+    def __init__(self, ckpt_dir: Path, keep: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+        self.error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error:
+            raise self.error
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()                                   # one in flight
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)  # snapshot
+
+        def work():
+            try:
+                save(self.dir, step, host_tree, extra, self.keep)
+                self.last_saved = step
+            except BaseException as e:  # noqa: BLE001
+                self.error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,151 @@
+"""Heterogeneous cost-model stage partitioner.
+
+The paper hand-tunes its 2-stage split ("right before the 4th residual block
+of layer 3" for the Xeon+iPhone-11 pair, "the entire layer 3" for the
+iPhone 16).  This module makes that choice a cost model:
+
+* :func:`split_blocks` — given per-block (flops, boundary_bytes) and a list of
+  device profiles (compute rate, link bandwidth), choose cut points that
+  minimise the pipeline's bottleneck stage time (compute + boundary transfer).
+  Reproduces the paper's split decisions from its own device numbers
+  (validated in tests/benchmarks).
+
+* :func:`plan_pipeline` — homogeneous-TPU planning for the shard_map
+  pipeline: stage count S (divisor of the model-axis), replica factor R,
+  layers-per-stage with padding, and the schedule's tick/bubble accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.hw.specs import DeviceProfile
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous split (paper §4.1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    cuts: Tuple[int, ...]              # block index where each next stage starts
+    stage_seconds: Tuple[float, ...]   # per-microbatch compute time per stage
+    comm_seconds: Tuple[float, ...]    # boundary transfer time after stage i
+    bottleneck: float                  # max(stage+comm) — steady-state tick
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / self.bottleneck
+
+
+def _stage_time(flops: float, dev: DeviceProfile, efficiency: float) -> float:
+    return flops / (dev.flops * efficiency)
+
+
+def split_blocks(costs: Sequence[Tuple[float, float]],
+                 devices: Sequence[DeviceProfile],
+                 efficiency: float = 0.5,
+                 train: bool = True) -> SplitPlan:
+    """Exhaustive search over cut points (n_blocks choose n_stages-1).
+
+    costs: per-block (flops_fwd, boundary_bytes).  Training multiplies block
+    compute by 3 (fwd+bwd) and boundary traffic by 2 (activation + gradient).
+    """
+    n = len(costs)
+    s = len(devices)
+    assert 1 <= s <= n
+    fmul = 3.0 if train else 1.0
+    bmul = 2.0 if train else 1.0
+
+    best: Optional[SplitPlan] = None
+    for cuts in itertools.combinations(range(1, n), s - 1):
+        bounds = (0,) + cuts + (n,)
+        stage_t, comm_t = [], []
+        for i in range(s):
+            f = sum(c[0] for c in costs[bounds[i]:bounds[i + 1]]) * fmul
+            stage_t.append(_stage_time(f, devices[i], efficiency))
+            if i < s - 1:
+                link = min(devices[i].link_bw, devices[i + 1].link_bw)
+                comm_t.append(bmul * costs[bounds[i + 1] - 1][1] / link)
+        tick = max(st + (comm_t[i] if i < s - 1 else 0.0)
+                   for i, st in enumerate(stage_t))
+        plan = SplitPlan(cuts, tuple(stage_t), tuple(comm_t), tick)
+        if best is None or plan.bottleneck < best.bottleneck:
+            best = plan
+    return best
+
+
+def pipeline_batch_seconds(plan: SplitPlan, n_micro: int) -> float:
+    """Steady-state batch time: fill/drain + M ticks of the bottleneck."""
+    ramp = sum(plan.stage_seconds) + sum(plan.comm_seconds) - plan.bottleneck
+    return ramp + n_micro * plan.bottleneck
+
+
+def single_device_seconds(costs: Sequence[Tuple[float, float]],
+                          dev: DeviceProfile, n_micro: int,
+                          efficiency: float = 0.5, train: bool = True) -> float:
+    fmul = 3.0 if train else 1.0
+    return n_micro * _stage_time(sum(c[0] for c in costs) * fmul, dev, efficiency)
+
+
+# ---------------------------------------------------------------------------
+# homogeneous plan for the shard_map pipeline (TPU fleet)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    n_stages: int                     # S
+    replicas: int                     # R = model_axis // S (extra DP inside model axis)
+    layers_per_stage: int             # ceil(L / S)
+    n_pad: int                        # no-op layer slots (masked at runtime)
+    n_micro: int                      # M
+    schedule: str                     # gpipe | hybrid
+
+    @property
+    def slots(self) -> int:
+        return self.n_stages * self.layers_per_stage
+
+    def ticks(self) -> int:
+        m, s = self.n_micro, self.n_stages
+        if self.schedule == "hybrid":
+            # fused last-stage F+B: fwd stream M+S-1, bwd stream ends S-2 later
+            return m + 2 * s - 2
+        return 2 * (m + s - 1)
+
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the schedule (work-units idle / total slots)."""
+        m, s = self.n_micro, self.n_stages
+        # fwd+bwd work per mb per stage = 3 units; GPipe & hybrid both idle
+        # 3*(S-1) unit-slots at ramp-up+down (paper Fig.3: same total, spread)
+        total = 3.0 * (m + s - 1) * s
+        busy = 3.0 * m * s
+        return 1.0 - busy / total
+
+
+def plan_pipeline(n_layers: int, model_axis: int, n_micro: int = 0,
+                  schedule: str = "hybrid",
+                  candidates: Sequence[int] = (16, 8, 4, 2),
+                  max_pad_frac: float = 0.2) -> PipelinePlan:
+    """Choose S: prefer the LARGEST stage count whose padding waste stays
+    under ``max_pad_frac`` — more stages = fewer layers (weights + Adam
+    moments) per device, and HBM is the binding constraint before bubble
+    fraction is (EXPERIMENTS §Perf records the bubble cost of this choice).
+    Falls back to the minimum-padding S when none meets the threshold."""
+    feasible = []
+    for s in candidates:
+        if s > model_axis or model_axis % s:
+            continue
+        lps = -(-n_layers // s)
+        pad = s * lps - n_layers
+        m = n_micro or max(2 * s, 4)
+        feasible.append(PipelinePlan(s, model_axis // s, lps, pad, m, schedule))
+    if not feasible:
+        raise ValueError(f"no stage count from {candidates} divides model axis "
+                         f"{model_axis}")
+    under = [p for p in feasible
+             if p.n_pad / max(n_layers, 1) <= max_pad_frac]
+    if under:
+        return max(under, key=lambda p: p.n_stages)
+    return min(feasible, key=lambda p: (p.n_pad, -p.n_stages))

@@ -1,0 +1,210 @@
+"""GSPMD stacked-stage pipeline (beyond-paper scalability path).
+
+The shard_map pipeline puts stages on "model"; the MoE giants additionally
+need tensor/expert parallelism *within* a stage.  This variant runs the
+pipeline entirely inside jit: stage-stacked weights (S, L/S, ...) sharded on
+the 16-way "data" axis, TP/EP on "model", DP on "pod".  The per-tick shift
+of the stage buffer (concat of [inject, y[:-1]] on the stage-sharded dim)
+lowers to a CollectivePermute — same wire pattern as the manual ppermute,
+but every stage-internal op remains GSPMD-sharded (praxis-style pipelining).
+
+Backward = AD through the tick scan (GPipe schedule); MoE aux-losses
+accumulate naturally through the scan carry (this is why MoE archs live here
+rather than in the manual pipeline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import sharding as sh
+from repro.core.partition import PipelinePlan, plan_pipeline
+from repro.models import blocks as B
+from repro.models.api import build_model
+from repro.models.common import embed_tokens, rmsnorm, chunked_xent
+from repro.models.lm import head_weight
+from repro.optim import adamw
+
+AUX_COEF = 0.01
+
+
+def _stack_for_stages(params: dict, plan: PipelinePlan) -> dict:
+    s, lps = plan.n_stages, plan.layers_per_stage
+
+    def fix(a):
+        pad = plan.slots - a.shape[0]
+        if pad:
+            a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+        return a.reshape((s, lps) + a.shape[1:])
+
+    out = dict(params)
+    out["blocks"] = jax.tree.map(fix, params["blocks"])
+    return out
+
+
+def _unstack(params_pp: dict, plan: PipelinePlan, n_layers: int) -> dict:
+    out = dict(params_pp)
+    out["blocks"] = jax.tree.map(
+        lambda a: a.reshape((plan.slots,) + a.shape[2:])[:n_layers],
+        params_pp["blocks"])
+    return out
+
+
+def make_gspmd_pp_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                             rcfg: RunConfig, mesh,
+                             opt_cfg: Optional[adamw.AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    model = build_model(cfg, rcfg)
+    cdt = jnp.dtype(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+
+    stage_axis = mesh.shape["data"]
+    plan = plan_pipeline(cfg.n_layers, stage_axis,
+                         rcfg.microbatches, "gpipe", candidates=(stage_axis,))
+    S, lps = plan.n_stages, plan.layers_per_stage
+    dp = mesh.shape.get("pod", 1)
+    b_dp = shape.global_batch // dp        # per-pod batch (for picking M)
+    m = rcfg.microbatches or min(b_dp, 2 * S)
+    while b_dp % m:
+        m -= 1
+    b_mb = shape.global_batch // m         # GLOBAL microbatch rows; the pod
+    #                                        axis shards this dim (arrays in
+    #                                        jit are global-shaped)
+    p_front = cfg.frontend_seq if cfg.frontend else 0
+    t_tok = shape.seq_len - p_front
+    t_total = shape.seq_len
+    n_ticks = m + S - 1
+
+    def stage_fn(bp_stage, x, stage_idx):
+        """One stage's lps layers. bp_stage: (lps, ...); x: (b_mb, T, D)."""
+        def body(carry, inp):
+            x, aux = carry
+            bp, i = inp
+            gidx = stage_idx * lps + i
+
+            def live(x):
+                return B.block_train(cfg, bp, x, gidx, uk)
+
+            x, a = jax.lax.cond(gidx < cfg.n_layers, live,
+                                lambda x: (x, B.ZERO), x)
+            return (x, aux + a), None
+
+        fn = jax.checkpoint(body, prevent_cse=False) if rcfg.remat else body
+        (x, aux), _ = jax.lax.scan(fn, (x, B.ZERO),
+                                   (bp_stage, jnp.arange(lps)))
+        return x, aux
+
+    def buf_constraint(buf):
+        return jax.lax.with_sharding_constraint(
+            buf, NamedSharding(mesh, P("data",
+                                       "pod" if "pod" in mesh.shape else None,
+                                       None, "model")))
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]                       # global (B, T)
+        tokens = tokens.reshape(m, b_mb, t_tok)
+        fr = None
+        if p_front:
+            fr = batch["frontend"].reshape(m, b_mb, p_front, cfg.d_model)
+        w = head_weight(cfg, params, cdt)
+        stage_ids = jnp.arange(S)
+
+        def embed_mb(t):
+            tc = jnp.clip(t, 0, m - 1)
+            x = embed_tokens(params["embed"], tokens[tc], cdt)
+            if p_front:
+                x = jnp.concatenate([fr[tc].astype(cdt), x], axis=1)
+            return x
+
+        buf0 = buf_constraint(jnp.zeros((S, b_mb, t_total, cfg.d_model), cdt))
+
+        def tick(carry, t):
+            buf, loss, aux = carry
+            y, a = jax.vmap(stage_fn)(params["blocks"], buf, stage_ids)
+            y = buf_constraint(y)
+            # only stages with live microbatches contribute aux (bubble ticks
+            # compute on garbage and must not pollute the load-balance loss)
+            live = ((t - stage_ids) >= 0) & ((t - stage_ids) < m)
+            aux = aux + jnp.sum(a * live.astype(a.dtype))
+            # last-stage output -> loss for microbatch t-(S-1)
+            mb_l = t - (S - 1)
+            lvalid = (mb_l >= 0) & (mb_l < m)
+            mb_lc = jnp.clip(mb_l, 0, m - 1)
+            h = rmsnorm(params["final_ln"], y[S - 1])
+            tok_mb = tokens[mb_lc]
+            if p_front:
+                hh = h[:, p_front - 1: p_front + t_tok - 1]
+                labels = tok_mb
+            else:
+                hh, labels = h[:, : t_tok - 1], tok_mb[:, 1:]
+            ce = chunked_xent(hh, w, labels, cfg.vocab_size)
+            loss = loss + jnp.where(lvalid, ce, 0.0) / m
+            # shift: new stage-0 input is the next microbatch's embedding
+            inject = embed_mb(t + 1)
+            buf = jnp.concatenate([inject[None], y[:-1]], axis=0)
+            buf = buf_constraint(buf)
+            return (buf, loss, aux), None
+
+        buf0 = buf0.at[0].set(embed_mb(0))
+        (_, loss, aux), _ = jax.lax.scan(
+            tick, (buf0, jnp.float32(0.0), jnp.float32(0.0)),
+            jnp.arange(n_ticks))
+        aux = aux / m                       # mean over microbatches
+        return loss + AUX_COEF * aux, {"ce": loss, "aux": aux}
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        new_p, new_o, stats = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_p, new_o, dict(metrics, loss=loss, **stats)
+
+    # ---- specs & shardings ----
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pp_shape = jax.eval_shape(functools.partial(_stack_for_stages, plan=plan),
+                              params_shape)
+    opt_shape = jax.eval_shape(adamw.init, pp_shape)
+    batch_specs = model.input_specs(shape)
+
+    # logical rules: stacked blocks get leading ("stage","layers")
+    logical = sh.param_logical_tree(pp_shape, leading=("stage", "layers"))
+    rules = dict(sh.RULE_TABLES["gspmd_pp"])
+
+    def shard_of(leaf, log):
+        return NamedSharding(mesh, sh.spec_for(log, leaf.shape, rules, mesh))
+
+    p_shard = jax.tree.map(shard_of, pp_shape, logical)
+    opt_shard = {"m": p_shard, "v": p_shard, "step": NamedSharding(mesh, P())}
+    b_shard = jax.tree.map(
+        lambda a: NamedSharding(
+            mesh, P("pod" if "pod" in mesh.shape else None))
+        if np.ndim(a) else NamedSharding(mesh, P()), batch_specs)
+    metrics_shape = jax.eval_shape(train_step, pp_shape, opt_shape,
+                                   batch_specs)[2]
+    out_shardings = (p_shard, opt_shard,
+                     jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                  metrics_shape))
+    return dict(
+        fn=train_step,
+        args=(pp_shape, opt_shape, batch_specs),
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=out_shardings,
+        donate_argnums=(0, 1),
+        meta={"strategy": "gspmd_pp", "S": S, "M": m,
+              "layers_per_stage": lps, "n_pad_layers": plan.n_pad,
+              "layers_multiplier": lps,
+              "tick_multiplier": n_ticks},
+        model=model,
+        plan=plan,
+        to_pipeline=functools.partial(_stack_for_stages, plan=plan),
+        from_pipeline=functools.partial(_unstack, plan=plan,
+                                        n_layers=cfg.n_layers),
+    )

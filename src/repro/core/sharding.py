@@ -1,0 +1,233 @@
+"""Logical-axis sharding rules -> NamedSharding/PartitionSpec.
+
+Params get logical axis names derived from their tree path (MaxText-style);
+a per-strategy rule table maps logical names to mesh axes.  Rules silently
+fall back to replication when a dimension is not divisible by the mesh axis
+size — divisibility is checked against real shapes so the dry-run never
+emits an invalid sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axes from tree paths
+# ---------------------------------------------------------------------------
+
+# (path-fragment, ndim) -> logical axes per dim.  First match wins; "*" in a
+# fragment matches any single path component.  Leading "layers" dims for
+# stacked leaves are added automatically.
+_PARAM_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    ("embed/tok",        ("vocab", "embed")),
+    ("head/w",           ("embed", "vocab")),
+    ("attn/wq",          ("embed", "q")),
+    ("attn/wk",          ("embed", "kv")),
+    ("attn/wv",          ("embed", "kv")),
+    ("attn/wo",          ("q", "embed")),
+    ("attn/bq",          ("q",)),
+    ("attn/bk",          ("kv",)),
+    ("attn/bv",          ("kv",)),
+    ("xattn/wq",         ("embed", "q")),
+    ("xattn/wk",         ("embed", "kv")),
+    ("xattn/wv",         ("embed", "kv")),
+    ("xattn/wo",         ("q", "embed")),
+    ("moe/router",       ("embed", "experts")),
+    ("moe/wi",           ("experts", "embed", "mlp")),
+    ("moe/wg",           ("experts", "embed", "mlp")),
+    ("moe/wo",           ("experts", "mlp", "embed")),
+    ("moe/shared/wi",    ("embed", "mlp")),
+    ("moe/shared/wg",    ("embed", "mlp")),
+    ("moe/shared/wo",    ("mlp", "embed")),
+    ("mlp/wi",           ("embed", "mlp")),
+    ("mlp/wg",           ("embed", "mlp")),
+    ("mlp/wo",           ("mlp", "embed")),
+    ("mamba/in_proj",    ("embed", "ssm_in")),
+    ("mamba/out_proj",   ("ssm_in", "embed")),
+    ("mamba/conv_w",     (None, "ssm_conv")),
+    ("mamba/conv_b",     ("ssm_conv",)),
+    ("rwkv/wr",          ("embed", "q")),
+    ("rwkv/wk",          ("embed", "q")),
+    ("rwkv/wv",          ("embed", "q")),
+    ("rwkv/wg",          ("embed", "q")),
+    ("rwkv/wo",          ("q", "embed")),
+    ("rwkv/ck",          ("embed", "mlp")),
+    ("rwkv/cv",          ("mlp", "embed")),
+    ("rwkv/cr",          ("embed", "q")),
+    ("rwkv/w_lora_a",    ("embed", None)),
+    ("rwkv/w_lora_b",    (None, "embed")),
+)
+
+# strategy -> {logical axis: mesh axis}
+RULE_TABLES: Dict[str, Dict[str, Any]] = {
+    # TP over "model", optional FSDP over "data" on the "embed" dim.
+    "gspmd_tp": {
+        "vocab": "model", "q": "model", "kv": "model", "mlp": "model",
+        "experts": "model", "ssm_in": "model", "ssm_conv": "model",
+        "embed": None,           # flipped to "data" when fsdp=True
+        "layers": None,
+    },
+    # stacked-stage pipeline in jit: stage axis on "data", TP on "model".
+    "gspmd_pp": {
+        "stage": "data",
+        "vocab": "model", "q": "model", "kv": "model", "mlp": "model",
+        "experts": "model", "ssm_in": "model", "ssm_conv": "model",
+        "embed": None, "layers": None,
+    },
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def logical_axes_for(path: str, ndim: int,
+                     leading: Tuple[Optional[str], ...] = ()) -> Tuple:
+    """Logical axes for one param leaf; unknown leaves replicate."""
+    for frag, axes in _PARAM_RULES:
+        if path.endswith(frag) or (frag + "/") in path or ("/" + frag) in path:
+            want = len(axes) + len(leading)
+            if ndim == want:
+                return tuple(leading) + tuple(axes)
+            if ndim == len(axes):
+                return tuple(axes)
+            # stacked with extra leading dims (e.g. experts handled in rule)
+            extra = ndim - len(axes)
+            if extra > 0:
+                return tuple(leading[:extra]) + (None,) * max(0, extra - len(leading)) + tuple(axes)
+    return (None,) * ndim
+
+
+def param_logical_tree(params: Any, stacked_prefix: str = "blocks",
+                       leading: Tuple[Optional[str], ...] = ("layers",)) -> Any:
+    """Pytree of logical-axis tuples matching ``params``.
+
+    Leaves under ``stacked_prefix`` (or ``enc_blocks``/``dec_blocks``) get the
+    ``leading`` axes prepended (the stacked layer dim).
+    """
+    def fn(path, leaf):
+        p = _path_str(path)
+        stacked = any(p.startswith(pref) for pref in
+                      (stacked_prefix, "enc_blocks", "dec_blocks"))
+        lead = leading if stacked else ()
+        return logical_axes_for(p, np.ndim(leaf), lead)
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def spec_for(logical: Tuple, shape: Tuple[int, ...], rules: Dict[str, Any],
+             mesh: Mesh) -> P:
+    """PartitionSpec from logical axes; replicates non-divisible dims."""
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        if axis is None or axis in used:
+            out.append(None)
+            continue
+        size = np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))])
+        if dim % int(size) == 0:
+            out.append(axis)
+            used.add(axis)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, strategy: str,
+                    fsdp: bool = False, extra_rules: Optional[dict] = None) -> Any:
+    """NamedSharding tree for a params (ShapeDtypeStruct) tree."""
+    rules = dict(RULE_TABLES[strategy])
+    if fsdp:
+        rules["embed"] = "data"
+    if extra_rules:
+        rules.update(extra_rules)
+    logical = param_logical_tree(params_shape)
+
+    def fn(leaf, log):
+        return NamedSharding(mesh, spec_for(log, leaf.shape, rules, mesh))
+
+    return jax.tree.map(fn, params_shape, logical)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh,
+                    batch_axes: Tuple[str, ...] = ("pod", "data")) -> Any:
+    """Shard dim-0 (batch) of every input over the data axes present."""
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+
+    def fn(leaf):
+        if np.ndim(leaf) == 0:
+            return NamedSharding(mesh, P())
+        dp = int(np.prod([mesh.shape[a] for a in axes]))
+        if leaf.shape[0] % dp == 0:
+            return NamedSharding(mesh, P(axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(fn, batch_specs)
+
+
+def cache_shardings(cache_specs: Any, mesh: Mesh, cfg) -> Any:
+    """KV caches: layer dim replicated, batch dim over data axes, head/state
+    dims over "model" when divisible.  Cache leaves are (L, B, ...)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in axes]))
+    tp = mesh.shape.get("model", 1)
+
+    def fn(path, leaf):
+        if np.ndim(leaf) < 2:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * np.ndim(leaf)
+        # find the batch dim: first dim equal to a multiple of dp after layers
+        bdim = 1 if np.ndim(leaf) >= 2 else 0
+        if leaf.shape[bdim] % dp == 0 and leaf.shape[bdim] > 0:
+            spec[bdim] = axes
+        # shard the largest trailing dim over model if divisible
+        best, best_size = None, 0
+        for i in range(bdim + 1, np.ndim(leaf)):
+            if leaf.shape[i] % tp == 0 and leaf.shape[i] > best_size and leaf.shape[i] >= tp:
+                best, best_size = i, leaf.shape[i]
+        if best is not None:
+            spec[best] = "model"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(fn, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hints (set at trace time by the step builders)
+# ---------------------------------------------------------------------------
+
+_ACT_HINTS: Dict[str, Any] = {}
+
+
+def set_activation_hints(**kw) -> None:
+    """Register NamedShardings for named activation sites (e.g. "residual").
+    Trace-time: the step builders set these before jit-tracing; model code
+    applies them via :func:`constrain`."""
+    _ACT_HINTS.update(kw)
+
+
+def clear_activation_hints() -> None:
+    _ACT_HINTS.clear()
+
+
+def constrain(name: str, x):
+    s = _ACT_HINTS.get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,46 @@
+"""Strategy selection per (arch × shape): which distribution path runs a cell.
+
+* ``pp_shardmap`` — the paper's pipeline (shard_map + ppermute), for training
+  shapes of uniform-block small/mid archs (fits when params/S ≤ HBM with DP
+  replication over "data").
+* ``gspmd_tp``    — jit GSPMD TP("model") × DP/FSDP("data","pod"); all
+  serving shapes, enc-dec, and big-vocab archs.
+* ``gspmd_pp``    — stacked-stage scan pipeline in jit (PP on "data" × TP on
+  "model"); training shapes of the MoE giants.
+
+``auto`` resolves per the table; configs/CLI can override.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+# archs whose TRAIN cells run the paper's shard_map pipeline by default
+PP_TRAIN_ARCHS = {
+    "granite-8b", "mistral-nemo-12b", "rwkv6-1.6b", "internvl2-1b", "zamba2-7b",
+}
+# MoE giants: PP×TP stacked pipeline for training
+PP_STACKED_TRAIN_ARCHS = {"grok-1-314b", "llama4-scout-17b-a16e"}
+
+
+def resolve(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig) -> str:
+    if rcfg.strategy != "auto":
+        return rcfg.strategy
+    if shape.kind == "train":
+        if cfg.arch_id in PP_TRAIN_ARCHS:
+            return "pp_shardmap"
+        if cfg.arch_id in PP_STACKED_TRAIN_ARCHS:
+            return "gspmd_pp"
+        return "gspmd_tp"
+    return "gspmd_tp"
+
+
+def wants_fsdp(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """FSDP over "data" for params only when the TP-sharded weights exceed
+    ~6 GB/device.  §Perf iteration A1: with grad accumulation, FSDP
+    all-gathers weights EVERY microbatch (measured 552 GB wire/dev for
+    command-r train) — ZeRO-1 moments (always on) give the memory win
+    without the per-microbatch gather, so the FSDP threshold is high."""
+    if shape.kind != "train":
+        return False
+    return cfg.total_params() * 2 / 16 > 6e9

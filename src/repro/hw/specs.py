@@ -1,0 +1,88 @@
+"""Hardware device profiles.
+
+The paper's Table 1 compares mobile/edge/desktop devices by TFLOPS; its cost
+model for choosing a pipeline split point is implicit (hand-tuned).  Here the
+profiles are explicit inputs to the heterogeneous partitioner
+(:mod:`repro.core.partition`) and to the roofline analysis
+(:mod:`repro.analysis.roofline`).
+
+All numbers are peak ratings.  ``flops`` is the dense-matmul peak for the
+relevant dtype (fp32 for the paper's devices, bf16 for TPU), ``mem_bw`` is
+HBM/DRAM bandwidth, ``link_bw`` is the inter-device link bandwidth *per
+direction* for the transport that device uses (USB for phones in the paper,
+ICI for TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    year: int
+    flops: float           # peak FLOP/s (dtype noted in ``dtype``)
+    mem_bytes: float       # usable memory per device, bytes
+    mem_bw: float          # bytes/s
+    link_bw: float         # bytes/s per direction on the inter-device link
+    dtype: str = "fp32"
+    # Thermal model (paper §4.2): sustained fraction of peak after throttling
+    # and the time constant (seconds of saturated compute) to reach it.
+    thermal_sustained: float = 1.0
+    thermal_tau_s: float = float("inf")
+
+
+# --- TPU target (the production fleet) -------------------------------------
+TPU_V5E = DeviceProfile(
+    name="tpu-v5e",
+    year=2023,
+    flops=197e12,            # bf16 MXU peak per chip (spec'd for this repo)
+    mem_bytes=16e9,          # 16 GB HBM
+    mem_bw=819e9,            # 819 GB/s
+    link_bw=50e9,            # ~50 GB/s per ICI link
+    dtype="bf16",
+    thermal_sustained=0.95,
+    thermal_tau_s=600.0,
+)
+
+# Effective wire efficiency applied to link_bw when converting collective
+# payload bytes into seconds (protocol + scheduling overhead).
+ICI_EFFICIENCY = 0.9
+
+# --- Paper Table 1 devices (used by bench_devices + bench_pipeline) --------
+XEON_E3_1225V3 = DeviceProfile(
+    name="xeon-e3-1225v3", year=2013, flops=0.061e12, mem_bytes=32e9,
+    mem_bw=25.6e9, link_bw=60e6,   # paired with Lightning-era USB2 in the paper
+)
+IPHONE_11_PRO = DeviceProfile(
+    name="iphone-11-pro", year=2019, flops=0.63e12, mem_bytes=2.0e9,
+    mem_bw=34e9, link_bw=60e6,     # Lightning: USB 2.0, ~60 MB/s (paper §4.1.2)
+    thermal_sustained=0.80, thermal_tau_s=180.0,  # paper Fig. 6: Serious ~batch 17
+)
+IPHONE_16 = DeviceProfile(
+    name="iphone-16", year=2024, flops=1.907e12, mem_bytes=8e9,
+    mem_bw=60e9, link_bw=1.25e9,   # USB-C 3.2 Gen 2: 10 Gb/s (paper §4.1.2)
+    thermal_sustained=0.85, thermal_tau_s=300.0,
+)
+M2_MAX_CPU = DeviceProfile(
+    name="m2-max-cpu", year=2023, flops=0.9e12, mem_bytes=32e9,
+    mem_bw=400e9, link_bw=1.25e9,
+)
+A18_PRO = DeviceProfile(
+    name="a18-pro", year=2024, flops=2.289e12, mem_bytes=8e9,
+    mem_bw=60e9, link_bw=1.25e9, thermal_sustained=0.85, thermal_tau_s=300.0,
+)
+
+PROFILES: Dict[str, DeviceProfile] = {
+    p.name: p
+    for p in (TPU_V5E, XEON_E3_1225V3, IPHONE_11_PRO, IPHONE_16, M2_MAX_CPU, A18_PRO)
+}
+
+
+def get_profile(name: str) -> DeviceProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown device profile {name!r}; known: {sorted(PROFILES)}")

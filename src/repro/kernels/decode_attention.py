@@ -1,0 +1,98 @@
+"""Flash-decode — Pallas TPU kernel for the HBM-bound decode step.
+
+One new token attends to a (span,)-long KV cache: the op is a pure KV
+stream (arithmetic intensity ~1 flop/byte), so the kernel's job is to
+stream K/V tiles through VMEM exactly once with online softmax.  Grid
+(B, nS) with the span dimension sequential; all H q-heads ride in the tile
+(q is tiny), GQA expansion happens on the score tile, never in HBM.
+``valid`` masks unwritten cache slots (per-lane positions — continuous
+batching).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, scale: float, n_s: int, nrep: int):
+    i_s = pl.program_id(1)
+
+    @pl.when(i_s == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bs, G, D)
+    v = v_ref[0].astype(jnp.float32)
+    live = valid_ref[0]                                # (bs,)
+    # scores: (H, bs) with GQA head->group mapping via reshape
+    h, d = q.shape
+    bs, g, _ = k.shape
+    qg = q.reshape(g, nrep, d)
+    s = jnp.einsum("gnd,sgd->gns", qg, k) * scale      # (G, nrep, bs)
+    s = jnp.where(live[None, None, :], s, NEG_INF)
+    m_prev = m_ref[...]                                # (G, nrep)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isinf(m_new)[..., None], 0.0, p)
+    corr = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "gns,sgd->gnd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(i_s == n_s - 1)
+    def finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[..., None]).reshape(h, d).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                         valid: jax.Array, *, scale: Optional[float] = None,
+                         block_s: int = DEFAULT_BLOCK_S,
+                         interpret: bool = False) -> jax.Array:
+    """q (B,1,H,D); ck/cv (B,S,G,D); valid (B,S) bool.  Returns (B,1,H,D)."""
+    b, _, h, d = q.shape
+    s_len, g = ck.shape[1], ck.shape[2]
+    nrep = h // g
+    scale = d ** -0.5 if scale is None else scale
+    block_s = min(block_s, s_len)
+    pad = (-s_len) % block_s
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    n_s = ck.shape[1] // block_s
+    out = pl.pallas_call(
+        functools.partial(_dec_kernel, scale=scale, n_s=n_s, nrep=nrep),
+        grid=(b, n_s),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, i: (b_, 0, 0)),
+            pl.BlockSpec((1, block_s, g, d), lambda b_, i: (b_, i, 0, 0)),
+            pl.BlockSpec((1, block_s, g, d), lambda b_, i: (b_, i, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda b_, i: (b_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, i: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, nrep), jnp.float32),
+            pltpu.VMEM((g, nrep), jnp.float32),
+            pltpu.VMEM((g, nrep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[:, 0], ck, cv, valid)
+    return out[:, None]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the paper's §3.4 discipline:
+two implementations must agree before an op ships — it caught MPSGraph's
+dropout-scaling and broadcast-matmul bugs; these oracles serve the same role
+for the TPU kernels, swept in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# flash attention oracle: blockwise online softmax (also the big-T model path)
+from repro.models.flash_ref import flash_attention_ref  # noqa: F401
+# recurrence oracles
+from repro.models.rwkv import rwkv6_scan_ref  # noqa: F401
+from repro.models.ssm import mamba2_scan_ref  # noqa: F401
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def decode_attention_ref(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                         valid: jax.Array, scale: float) -> jax.Array:
+    """q (B,1,H,D); ck/cv (B,S,G,D); valid (B,S)."""
+    b, _, h, d = q.shape
+    g = ck.shape[2]
+    nrep = h // g
+    kk = jnp.broadcast_to(ck[:, :, :, None, :],
+                          ck.shape[:3] + (nrep, d)).reshape(
+        b, ck.shape[1], h, d)
+    vv = jnp.broadcast_to(cv[:, :, :, None, :],
+                          cv.shape[:3] + (nrep, d)).reshape(
+        b, cv.shape[1], h, d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+def rwkv6_chunked_ref(r, k, v, log_w, u):
+    """Adapter: chunked kernel signature -> recurrence oracle."""
+    out, _ = rwkv6_scan_ref(r, k, v, jnp.exp(log_w), u)
+    return out

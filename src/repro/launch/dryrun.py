@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and record memory / cost / collective artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>[__<strategy>].json
+and feed EXPERIMENTS.md §Dry-run / §Roofline via benchmarks/roofline_report.py.
+
+NOTE the XLA_FLAGS line above MUST precede any jax import (device count locks
+on first backend init) — that is why it is the first statement of the module.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, RunConfig, get_config, get_shape,
+                           shape_applicable)
+from repro.core import strategy as strat
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# archs whose layer loop we unroll for exact HLO accounting (dense/moe attn
+# models; SSM/hybrid inner time-scans can't unroll — they use the analytic
+# column of the roofline instead: see DESIGN.md §9)
+UNROLL_OK = {"granite-8b", "mistral-nemo-12b", "yi-34b", "command-r-35b",
+             "whisper-small", "internvl2-1b", "llama4-scout-17b-a16e",
+             "grok-1-314b"}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             strategy: str = None, unroll: bool = None,
+             seq_shard: bool = False,
+             out_dir: Path = ART_DIR, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        cell.update(status="skip", reason=why)
+        _save(cell, out_dir)
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if unroll is None:
+        unroll = arch in UNROLL_OK
+    rcfg = RunConfig(unroll_layers=unroll, seq_shard=seq_shard)
+    t0 = time.time()
+    try:
+        built = make_step(cfg, shape, rcfg, mesh, strategy=strategy)
+        cell["strategy"] = built["meta"]["strategy"]
+        with mesh:
+            jitted = jax.jit(built["fn"],
+                             in_shardings=built["in_shardings"],
+                             out_shardings=built["out_shardings"],
+                             donate_argnums=built["donate_argnums"])
+            lowered = jitted.lower(*built["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        from repro.analysis.hlo import parse_collectives
+        colls = parse_collectives(hlo, n_devices=mesh.size)
+        cell.update(
+            status="ok",
+            unrolled=unroll,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device": ma.argument_size_in_bytes
+                    + ma.temp_size_in_bytes + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes,
+            },
+            cost={
+                "flops_per_device": ca.get("flops", 0.0),
+                "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+            },
+            collectives={
+                "wire_bytes_per_device": colls.wire_bytes,
+                "payload_bytes_per_device": colls.payload_bytes,
+                "by_kind": {k: {"count": c, "wire_bytes": b}
+                            for k, (c, b) in colls.by_kind().items()},
+                "n_ops": len(colls.ops),
+            },
+            meta=built["meta"],
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name} "
+                  f"({cell['strategy']}): COMPILED in {t_compile:.0f}s — "
+                  f"peak/dev {cell['memory']['peak_bytes_per_device']/1e9:.2f} GB, "
+                  f"{ca.get('flops', 0)/1e9:.1f} GFLOP/dev, "
+                  f"{colls.wire_bytes/1e6:.1f} MB wire/dev "
+                  f"({len(colls.ops)} collective ops)")
+            print("  memory_analysis:", ma)
+            ck = {k: v for k, v in ca.items() if "flops" in k or k == "bytes accessed"}
+            print("  cost_analysis:", ck)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: FAILED — {e}")
+    _save(cell, out_dir)
+    return cell
+
+
+def _save(cell: dict, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    parts = [cell["arch"], cell["shape"], cell["mesh"]]
+    if cell.get("strategy"):
+        parts.append(cell["strategy"])
+    if cell.get("meta", {}).get("seq_shard"):
+        parts.append("seqshard")
+    path = out_dir / ("__".join(parts) + ".json")
+    path.write_text(json.dumps(cell, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--strategy", default=None,
+                    choices=[None, "pp_shardmap", "gspmd_tp", "gspmd_pp"])
+    ap.add_argument("--unroll", type=int, default=-1,
+                    help="-1 auto, 0 off, 1 on")
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    unroll = None if args.unroll < 0 else bool(args.unroll)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cell = run_cell(arch, shp, mp, strategy=args.strategy,
+                                unroll=unroll, seq_shard=args.seq_shard)
+                st = cell["status"]
+                n_ok += st == "ok"
+                n_fail += st == "error"
+                n_skip += st == "skip"
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

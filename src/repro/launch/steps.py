@@ -1,0 +1,220 @@
+"""Step builders: jit-able train/serve steps with full sharding annotations.
+
+Each builder returns (fn, arg_specs, in_shardings, out_shardings, donate)
+ready for ``jax.jit(...).lower(*arg_specs)`` — the dry-run consumes exactly
+this; real runs call the same jitted function with concrete arrays.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import sharding as sh
+from repro.core import strategy as strat
+from repro.launch.mesh import data_axes, dp_degree
+from repro.models.api import Model, build_model
+from repro.optim import adamw
+
+
+def _params_shape(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def _metrics_sharding(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _logits_sharding(mesh, batch: int):
+    dp = dp_degree(mesh)
+    if batch % dp == 0:
+        return NamedSharding(mesh, P(data_axes(mesh)))
+    return NamedSharding(mesh, P())
+
+
+def pick_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Bound per-microbatch tokens/device to ~8k (activation memory)."""
+    dp = dp_degree(mesh)
+    local_seqs = max(1, shape.global_batch // dp)
+    tokens_dev = local_seqs * shape.seq_len
+    target = max(1, tokens_dev // 8192)
+    accum = 1
+    for k in range(1, local_seqs + 1):
+        if local_seqs % k == 0 and k <= target:
+            accum = k
+    return accum
+
+
+# ---------------------------------------------------------------------------
+# gspmd_tp / gspmd_pp train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig,
+                    mesh, opt_cfg: adamw.AdamWConfig = None,
+                    strategy: str = None):
+    strategy = strategy or strat.resolve(cfg, shape, rcfg)
+    if strategy == "pp_shardmap":
+        from repro.core import pipeline as pp
+        return pp.make_pp_train_step(cfg, shape, rcfg, mesh, opt_cfg)
+    if strategy == "gspmd_pp":
+        from repro.core import pipeline_gspmd as gpp
+        return gpp.make_gspmd_pp_train_step(cfg, shape, rcfg, mesh, opt_cfg)
+    return _make_tp_train_step(cfg, shape, rcfg, mesh, opt_cfg)
+
+
+def _make_tp_train_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig,
+                        mesh, opt_cfg=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    model = build_model(cfg, rcfg)
+    fsdp = rcfg.fsdp or strat.wants_fsdp(cfg, shape)
+    accum = rcfg.grad_accum if rcfg.grad_accum > 1 else pick_grad_accum(cfg, shape, mesh)
+    daxes = data_axes(mesh)
+    if rcfg.seq_shard:
+        from repro.core.sharding import set_activation_hints
+        set_activation_hints(residual=NamedSharding(
+            mesh, P(daxes, "model", None)))
+
+    def constrain_batch(b):
+        return jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, P(daxes))) if np.ndim(a) else a, b)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                batch)
+
+            def mb_step(carry, mb):
+                gacc, lacc = carry
+                mb = constrain_batch(mb)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                mb_step, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+        new_params, new_opt, stats = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_params, new_opt, metrics
+
+    # --- specs & shardings ---------------------------------------------------
+    params_shape = _params_shape(model)
+    opt_shape = jax.eval_shape(adamw.init, params_shape)
+    batch_specs = model.input_specs(shape)
+
+    p_shard = sh.param_shardings(params_shape, mesh, "gspmd_tp", fsdp=fsdp)
+    # ZeRO-1: moments take fsdp-style sharding regardless (sharded over data)
+    m_shard = sh.param_shardings(params_shape, mesh, "gspmd_tp",
+                                 fsdp=rcfg.zero1 or fsdp)
+    opt_shard = {"m": m_shard, "v": m_shard,
+                 "step": NamedSharding(mesh, P())}
+    b_shard = sh.batch_shardings(batch_specs, mesh)
+    metrics_shape = jax.eval_shape(
+        lambda p, o, b: train_step(p, o, b)[2], params_shape, opt_shape,
+        batch_specs)
+    out_shardings = (p_shard, opt_shard,
+                     jax.tree.map(lambda _: _metrics_sharding(mesh), metrics_shape))
+    return dict(
+        fn=train_step,
+        args=(params_shape, opt_shape, batch_specs),
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=out_shardings,
+        donate_argnums=(0, 1),
+        meta={"strategy": "gspmd_tp", "fsdp": fsdp, "accum": accum,
+              "seq_shard": rcfg.seq_shard,
+              "layers_multiplier": 1 if rcfg.unroll_layers else cfg.n_layers,
+              "accum_multiplier": accum},
+        model=model,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill + decode) — gspmd_tp for every family
+# ---------------------------------------------------------------------------
+
+def _serve_fsdp(cfg: ModelConfig, mesh) -> bool:
+    """Serving params: shard over "data" too when a model-axis-only shard
+    would exceed ~4 GB/device (grok/llama4/yi/command-r)."""
+    return cfg.total_params() * 2 / mesh.shape["model"] > 4e9
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig, mesh):
+    model = build_model(cfg, rcfg)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, shape.seq_len)
+
+    params_shape = _params_shape(model)
+    batch_specs = model.input_specs(shape)
+    p_shard = sh.param_shardings(params_shape, mesh, "gspmd_tp",
+                                 fsdp=_serve_fsdp(cfg, mesh))
+    b_shard = sh.batch_shardings(batch_specs, mesh)
+    out_shape = jax.eval_shape(prefill, params_shape, batch_specs)
+    logits_shard = _logits_sharding(mesh, shape.global_batch)
+    cache_shard = sh.cache_shardings(out_shape[1], mesh, cfg)
+    return dict(
+        fn=prefill,
+        args=(params_shape, batch_specs),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(),
+        meta={"strategy": "gspmd_tp",
+              "layers_multiplier": 1 if rcfg.unroll_layers else cfg.n_layers},
+        model=model,
+    )
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig, mesh):
+    model = build_model(cfg, rcfg)
+
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    params_shape = _params_shape(model)
+    specs = model.input_specs(shape)
+    cache_specs, token_specs = specs["cache"], specs["tokens"]
+    p_shard = sh.param_shardings(params_shape, mesh, "gspmd_tp",
+                                 fsdp=_serve_fsdp(cfg, mesh))
+    c_shard = sh.cache_shardings(cache_specs, mesh, cfg)
+    t_shard = sh.batch_shardings(token_specs, mesh)
+    out_shape = jax.eval_shape(decode, params_shape, cache_specs, token_specs)
+    logits_shard = _logits_sharding(mesh, shape.global_batch)
+    return dict(
+        fn=decode,
+        args=(params_shape, cache_specs, token_specs),
+        in_shardings=(p_shard, c_shard, t_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+        meta={"strategy": "gspmd_tp",
+              "layers_multiplier": 1 if rcfg.unroll_layers else cfg.n_layers},
+        model=model,
+    )
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: RunConfig, mesh,
+              strategy: str = None):
+    """Dispatch on the shape kind: train_step / prefill / decode."""
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, rcfg, mesh, strategy=strategy)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, rcfg, mesh)
+    return make_decode_step(cfg, shape, rcfg, mesh)

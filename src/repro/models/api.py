@@ -1,0 +1,60 @@
+"""Model protocol: one object per (arch, run) pair with uniform entry points.
+
+    model = build_model(cfg, rcfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch, max_len)
+    logits, cache = model.decode_step(params, cache, tokens)
+    specs = model.input_specs(shape)
+
+Families: decoder-only (dense/moe/ssm/hybrid/vlm) -> repro.models.lm;
+enc-dec (audio/whisper) -> repro.models.encdec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rcfg: RunConfig
+    init: Callable[[jax.Array], dict]
+    loss: Callable[[dict, Dict[str, jax.Array]], Tuple[jax.Array, dict]]
+    prefill: Callable[[dict, Dict[str, jax.Array], int], Tuple[jax.Array, dict]]
+    decode_step: Callable[[dict, dict, jax.Array], Tuple[jax.Array, dict]]
+    init_cache: Callable[[int, int], dict]
+    input_specs: Callable[[ShapeConfig], Dict[str, Any]]
+
+
+def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
+    pdt = jnp.dtype(rcfg.param_dtype)
+    cdt = jnp.dtype(rcfg.compute_dtype)
+    if cfg.family == "audio" and cfg.n_enc_layers:
+        return Model(
+            cfg=cfg, rcfg=rcfg,
+            init=lambda key: ED.init_encdec(cfg, key, pdt),
+            loss=lambda p, b: ED.encdec_loss(cfg, p, b, rcfg),
+            prefill=lambda p, b, ml: ED.encdec_prefill(cfg, p, b, rcfg, ml),
+            decode_step=lambda p, c, t: ED.encdec_decode_step(cfg, p, c, t, rcfg),
+            init_cache=lambda bsz, ml: ED.init_encdec_cache(cfg, bsz, ml, cdt),
+            input_specs=lambda s: ED.encdec_input_specs(cfg, s, rcfg),
+        )
+    return Model(
+        cfg=cfg, rcfg=rcfg,
+        init=lambda key: LM.init_lm(cfg, key, pdt),
+        loss=lambda p, b: LM.lm_loss(cfg, p, b, rcfg),
+        prefill=lambda p, b, ml: LM.lm_prefill(cfg, p, b, rcfg, ml),
+        decode_step=lambda p, c, t: LM.lm_decode_step(cfg, p, c, t, rcfg),
+        init_cache=lambda bsz, ml: LM.init_cache(cfg, bsz, ml, cdt),
+        input_specs=lambda s: LM.input_specs(cfg, s, rcfg),
+    )

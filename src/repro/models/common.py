@@ -1,0 +1,181 @@
+"""Shared layers: norms, RoPE, MLP, embeddings, chunked cross-entropy.
+
+Pure-functional: ``init_*`` build param dicts, ``apply_*`` consume them.
+Norm statistics and softmax/logsumexp run in fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, Dh); positions: (..., T) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., T, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return out.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, d_model: int, d_ff: int, glu: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "wi": truncated_normal(ks[0], (d_model, d_ff), scale_in, dtype),
+        "wo": truncated_normal(ks[1], (d_ff, d_model), scale_out, dtype),
+    }
+    if glu:
+        p["wg"] = truncated_normal(ks[2], (d_model, d_ff), scale_in, dtype)
+    return p
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = x @ params["wi"]
+    if "wg" in params:
+        h = _act(act)(x @ params["wg"]) * h
+    else:
+        h = _act(act)(h)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"tok": truncated_normal(key, (pad_vocab(vocab), d_model), 1.0, dtype)}
+
+
+def embed_tokens(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["tok"].astype(compute_dtype)[tokens]
+
+
+def init_head(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"w": truncated_normal(key, (d_model, pad_vocab(vocab)), d_model ** -0.5, dtype)}
+
+
+def lm_logits(head: Optional[dict], embed: dict, x: jax.Array) -> jax.Array:
+    """Head projection; tied (use embed.T) when ``head`` is None."""
+    w = embed["tok"].T if head is None else head["w"]
+    return x @ w.astype(x.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean CE over all positions. logits (..., Vp) fp-any; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab columns
+    vp = logits.shape[-1]
+    if vp != vocab:
+        mask = (jnp.arange(vp) < vocab)
+        logits = jnp.where(mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_xent(x: jax.Array, w: jax.Array, labels: jax.Array, vocab: int,
+                 chunk: int = 1024, unroll: bool = False) -> jax.Array:
+    """CE of ``x @ w`` against labels without materialising (B,T,V) logits.
+
+    x: (B, T, D); w: (D, Vp); labels: (B, T).  Scans over T in chunks so peak
+    memory is (B, chunk, Vp) — required for the 131k-262k vocab archs.
+    """
+    b, t, d = x.shape
+    n_chunks = max(1, -(-t // chunk))
+    tp = n_chunks * chunk if n_chunks > 1 else t
+    if tp != t:                                   # pad + mask the tail
+        x = jnp.pad(x, ((0, 0), (0, tp - t), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, tp - t)))
+    weight = (jnp.arange(tp) < t).astype(jnp.float32)  # (tp,)
+    wc = weight.reshape(n_chunks, tp // n_chunks)
+    xs = x.reshape(b, n_chunks, tp // n_chunks, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, tp // n_chunks).swapaxes(0, 1)
+
+    def body(acc, xl):
+        xc, lc, wgt = xl
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        vp = logits.shape[-1]
+        if vp != vocab:
+            logits = jnp.where(jnp.arange(vp) < vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - gold) * wgt[None, :]), None
+
+    if unroll:
+        total = jnp.float32(0.0)
+        for i in range(n_chunks):
+            total, _ = body(total, (xs[i], ls[i], wc[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ls, wc))
+    return total / (b * t)

@@ -1,0 +1,220 @@
+"""Encoder-decoder (whisper-small): conv audio frontend STUBBED — the
+encoder consumes precomputed frame embeddings (B, n_frames, D) per the
+assignment; sinusoidal positions; decoder = causal self-attn + cross-attn.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models.common import (apply_mlp, chunked_xent, embed_tokens,
+                                 init_embed, init_mlp, init_rmsnorm,
+                                 rmsnorm, sinusoidal_positions)
+
+
+def _dt(name):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def _init_dec_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "lnx": init_rmsnorm(cfg.d_model, dtype),
+            "xattn": attn.init_attention(ks[1], cfg, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def init_encdec(cfg: ModelConfig, key, param_dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": init_embed(ks[2], cfg.vocab_size, cfg.d_model, param_dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg, param_dtype))(enc_keys),
+        "enc_ln": init_rmsnorm(cfg.d_model, param_dtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg, param_dtype))(dec_keys),
+        "final_ln": init_rmsnorm(cfg.d_model, param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           rcfg: RunConfig) -> jax.Array:
+    cdt = _dt(rcfg.compute_dtype)
+    t = frames.shape[1]
+    pos = jnp.asarray(sinusoidal_positions(t, cfg.d_model))
+    x = frames.astype(cdt) + pos.astype(cdt)[None]
+
+    def body(x, bp):
+        h = attn.attention(bp["attn"], cfg, rmsnorm(bp["ln1"], x),
+                           use_rope=False, causal=False,
+                           use_kernels=rcfg.use_kernels)
+        x = x + h
+        return x + apply_mlp(bp["mlp"], rmsnorm(bp["ln2"], x), cfg.act), None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if rcfg.remat else body
+    from repro.models.lm import maybe_scan
+    x, _ = maybe_scan(fn, x, params["enc_blocks"], cfg.n_enc_layers,
+                      rcfg.unroll_layers)
+    return rmsnorm(params["enc_ln"], x)
+
+
+# ---------------------------------------------------------------------------
+# decoder (train)
+# ---------------------------------------------------------------------------
+
+def _dec_block_train(cfg, bp, x, enc_out, uk):
+    x = x + attn.attention(bp["attn"], cfg, rmsnorm(bp["ln1"], x),
+                           use_rope=False, causal=True, use_kernels=uk)
+    x = x + attn.cross_attention(bp["xattn"], cfg, rmsnorm(bp["lnx"], x), enc_out)
+    return x + apply_mlp(bp["mlp"], rmsnorm(bp["ln2"], x), cfg.act)
+
+
+def encdec_loss(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
+                rcfg: RunConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cdt = _dt(rcfg.compute_dtype)
+    tokens = batch["tokens"]
+    enc_out = encode(cfg, params, batch["frames"], rcfg)
+    t = tokens.shape[1]
+    pos = jnp.asarray(sinusoidal_positions(t, cfg.d_model)).astype(cdt)
+    x = embed_tokens(params["embed"], tokens, cdt) + pos[None]
+
+    def body(x, bp):
+        return _dec_block_train(cfg, bp, x, enc_out, rcfg.use_kernels), None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if rcfg.remat else body
+    from repro.models.lm import maybe_scan
+    x, _ = maybe_scan(fn, x, params["dec_blocks"], cfg.n_layers,
+                      rcfg.unroll_layers)
+    x = rmsnorm(params["final_ln"], x)
+    w = params["embed"]["tok"].T.astype(cdt)
+    ce = chunked_xent(x[:, :-1], w, tokens[:, 1:], cfg.vocab_size,
+                      chunk=min(2048, t - 1), unroll=rcfg.unroll_layers)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def encdec_prefill(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
+                   rcfg: RunConfig, max_len: int) -> Tuple[jax.Array, dict]:
+    """Encode frames + run the prompt through the decoder, building caches."""
+    cdt = _dt(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+    tokens = batch["tokens"]
+    bsz, t = tokens.shape
+    enc_out = encode(cfg, params, batch["frames"], rcfg)
+    pos = jnp.asarray(sinusoidal_positions(t, cfg.d_model)).astype(cdt)
+    x = embed_tokens(params["embed"], tokens, cdt) + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(t), (bsz, t))
+
+    def body(x, bp):
+        h, ck, cv = attn.prefill_attn(bp["attn"], cfg, rmsnorm(bp["ln1"], x),
+                                      positions, max_len, use_rope=False,
+                                      use_kernels=uk)
+        x = x + h
+        x = x + attn.cross_attention(bp["xattn"], cfg, rmsnorm(bp["lnx"], x), enc_out)
+        x = x + apply_mlp(bp["mlp"], rmsnorm(bp["ln2"], x), cfg.act)
+        # cross K/V computed once here for reuse at decode time
+        xk = enc_out @ bp["xattn"]["wk"]
+        xv = enc_out @ bp["xattn"]["wv"]
+        te = enc_out.shape[1]
+        cl = {"k": ck.astype(cdt), "v": cv.astype(cdt),
+              "xk": xk.reshape(bsz, te, cfg.n_kv_heads, cfg.head_dim).astype(cdt),
+              "xv": xv.reshape(bsz, te, cfg.n_kv_heads, cfg.head_dim).astype(cdt)}
+        return x, cl
+
+    from repro.models.lm import maybe_scan
+    x, layer_caches = maybe_scan(body, x, params["dec_blocks"], cfg.n_layers,
+                                 rcfg.unroll_layers)
+    x = rmsnorm(params["final_ln"], x)
+    logits = x[:, -1] @ params["embed"]["tok"].T.astype(cdt)
+    return logits, {"layers": layer_caches,
+                    "pos": jnp.full((bsz,), t, jnp.int32)}
+
+
+def encdec_decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                       tokens: jax.Array, rcfg: RunConfig) -> Tuple[jax.Array, dict]:
+    cdt = _dt(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+    bsz = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (bsz,))
+    # sinusoidal position for the current step (dynamic row per lane)
+    span = cache["layers"]["k"].shape[2]
+    table = jnp.asarray(sinusoidal_positions(span, cfg.d_model)).astype(cdt)
+    x = embed_tokens(params["embed"], tokens, cdt)
+    x = x + jnp.take(table, jnp.minimum(pos, span - 1), axis=0)[:, None]
+
+    def body(x, inp):
+        bp, cl = inp
+        h, ck, cv = attn.decode_attn(bp["attn"], cfg, rmsnorm(bp["ln1"], x),
+                                     cl["k"], cl["v"], pos, use_rope=False,
+                                     use_kernels=uk)
+        x = x + h
+        # cross attention against precomputed enc K/V
+        q = rmsnorm(bp["lnx"], x)
+        h = attn.sdpa((q @ bp["xattn"]["wq"]).reshape(bsz, 1, cfg.n_heads, cfg.head_dim),
+                      cl["xk"].astype(q.dtype), cl["xv"].astype(q.dtype),
+                      None, cfg.head_dim ** -0.5)
+        x = x + h.reshape(bsz, 1, cfg.q_dim) @ bp["xattn"]["wo"]
+        x = x + apply_mlp(bp["mlp"], rmsnorm(bp["ln2"], x), cfg.act)
+        return x, {"k": ck, "v": cv, "xk": cl["xk"], "xv": cl["xv"]}
+
+    from repro.models.lm import maybe_scan
+    x, new_layers = maybe_scan(body, x, (params["dec_blocks"], cache["layers"]),
+                               cfg.n_layers, rcfg.unroll_layers)
+    x = rmsnorm(params["final_ln"], x)
+    logits = x[:, -1] @ params["embed"]["tok"].T.astype(cdt)
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# cache + input specs
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    L = cfg.n_layers
+    te = cfg.frontend_seq
+    kv = lambda s: jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return {"layers": {"k": kv(max_len), "v": kv(max_len),
+                       "xk": kv(te), "xv": kv(te)},
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def encdec_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       rcfg: RunConfig) -> Dict[str, Any]:
+    cdt = _dt(rcfg.compute_dtype)
+    bsz = shape.global_batch
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((bsz, shape.seq_len), jnp.int32)
+        specs["frames"] = jax.ShapeDtypeStruct((bsz, cfg.frontend_seq, cfg.d_model), cdt)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((bsz, 1), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            functools.partial(init_encdec_cache, cfg, bsz, shape.seq_len, cdt))
+    return specs

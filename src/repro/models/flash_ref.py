@@ -1,0 +1,107 @@
+"""Blockwise online-softmax attention in pure jnp (flash-attention oracle).
+
+Used (a) as the memory-safe attention path for long sequences (the naive
+(T,T) score matrix at 32k seq would be hundreds of GB), and (b) as the
+numerical oracle for the Pallas flash kernel.  Double-blocked: scan over Q
+blocks (remat'd) × scan over KV blocks with running (m, l, acc) — identical
+math to the TPU kernel.  Supports causal, chunked-local (llama4) masks and
+GQA without materialising repeated K/V heads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_attn(q, k, v, qpos0, kpos0, causal: bool, chunk: int, scale: float,
+                t_k: int):
+    """One (Q-block, KV-block) tile. q (B,G,H,bq,D), k/v (B,G,bk,D).
+    G = kv heads, H = q heads per kv head."""
+    s = jnp.einsum("bghqd,bgkd->bghqk", q, k).astype(jnp.float32) * scale
+    bq, bk = s.shape[-2], s.shape[-1]
+    qpos = qpos0 + jnp.arange(bq)
+    kpos = kpos0 + jnp.arange(bk)
+    mask = (kpos < t_k)[None, :]            # padded keys are never attended
+    mask = jnp.broadcast_to(mask, (bq, bk))
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if chunk:
+        mask = mask & ((qpos[:, None] // chunk) == (kpos[None, :] // chunk))
+    return jnp.where(mask, s, NEG_INF)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale: Optional[float] = None,
+                        chunk: int = 0, block_q: int = 512,
+                        block_k: int = 512) -> jax.Array:
+    """q (B,T,H,D), k/v (B,Tk,G,D) with H % G == 0. Returns (B,T,H,D)."""
+    b, t, h, d = q.shape
+    tk, g = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    block_q = min(block_q, t)
+    block_k = min(block_k, tk)
+    # pad to block multiples
+    pq = (-t) % block_q
+    pk = (-tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    # layout: (B, G, H/G, nq, bq, D)
+    qb = qp.reshape(b, nq, block_q, g, h // g, d).transpose(0, 3, 4, 1, 2, 5)
+    kb = kp.reshape(b, nk, block_k, g, d).transpose(0, 3, 1, 2, 4)
+    vb = kb_v = vp.reshape(b, nk, block_k, g, d).transpose(0, 3, 1, 2, 4)
+
+    def q_block(iq, qtile):
+        # qtile: (B,G,H',bq,D)
+        m0 = jnp.full(qtile.shape[:-1], -jnp.inf, jnp.float32)
+        l0 = jnp.zeros(qtile.shape[:-1], jnp.float32)
+        a0 = jnp.zeros(qtile.shape, jnp.float32)
+
+        def kv_block(carry, ik):
+            m, l, acc = carry
+            ktile = jax.lax.dynamic_index_in_dim(kb, ik, 2, keepdims=False)
+            vtile = jax.lax.dynamic_index_in_dim(vb, ik, 2, keepdims=False)
+            s = _block_attn(qtile, ktile, vtile, iq * block_q, ik * block_k,
+                            causal, chunk, scale, tk)
+            mnew = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (padding): keep m finite for exp
+            msafe = jnp.where(jnp.isinf(mnew), 0.0, mnew)
+            p = jnp.exp(s - msafe[..., None])
+            p = jnp.where(jnp.isinf(mnew)[..., None], 0.0, p)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - msafe))
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bghqk,bgkd->bghqd", p.astype(vtile.dtype), vtile).astype(jnp.float32)
+            return (mnew, l, acc), None
+
+        if causal and not chunk:
+            nkv = jnp.minimum(nk, (iq + 1) * block_q // block_k + 1)
+        else:
+            nkv = nk
+        iks = jnp.arange(nk)
+        def guarded(carry, ik):
+            do = ik < nkv if causal and not chunk else jnp.bool_(True)
+            new, _ = kv_block(carry, ik)
+            keep = lambda a, b: jnp.where(do, a, b)
+            return jax.tree.map(keep, new, carry), None
+        (m, l, acc), _ = jax.lax.scan(guarded, (m0, l0, a0), iks)
+        lsafe = jnp.where(l == 0, 1.0, l)
+        return (acc / lsafe[..., None]).astype(q.dtype)
+
+    body = jax.checkpoint(q_block, prevent_cse=False, static_argnums=())
+
+    def scan_body(_, iq):
+        qtile = jax.lax.dynamic_index_in_dim(qb, iq, 3, keepdims=False)
+        return None, body(iq, qtile)
+
+    _, outs = jax.lax.scan(scan_body, None, jnp.arange(nq))
+    # outs: (nq, B, G, H', bq, D) -> (B, T, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block_q, h, d)
+    return out[:, :t]

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts: GShard/Switch-style grouped top-k dispatch.
+
+TPU-native dense dispatch: tokens are split into groups; within each group a
+capacity-bounded one-hot dispatch tensor routes tokens to experts via einsum,
+expert FFNs run batched over the expert dim (shardable over the "model" mesh
+axis = expert parallelism), and a combine einsum returns outputs.  Tokens
+beyond capacity are dropped (standard); a load-balancing auxiliary loss keeps
+routing spread.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import _act, init_mlp, apply_mlp, truncated_normal
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": truncated_normal(ks[0], (d, e), s_in, jnp.float32),
+        "wi": truncated_normal(ks[1], (e, d, f), s_in, dtype),
+        "wo": truncated_normal(ks[2], (e, f, d), s_out, dtype),
+    }
+    if cfg.glu:
+        p["wg"] = truncated_normal(ks[3], (e, d, f), s_in, dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, cfg.glu, dtype)
+    return p
+
+
+def _top_k_gating(probs: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """probs (G,N,E) -> (gates (G,N,E) zero except chosen, mask (G,N,E) bool)."""
+    gates = jnp.zeros_like(probs)
+    mask = jnp.zeros(probs.shape, bool)
+    p = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(p, axis=-1)
+        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        gates = gates + onehot * probs
+        mask = mask | onehot.astype(bool)
+        p = p * (1.0 - onehot)
+    return gates, mask
+
+
+def apply_moe(params: dict, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: float = 1.25,
+              group_size: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out (B,T,D), aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_tok = b * t
+    g = max(1, n_tok // group_size)
+    while n_tok % g:
+        g -= 1
+    n = n_tok // g
+    xg = x.reshape(g, n, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"])          # (G,N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, mask = _top_k_gating(probs, k)
+
+    # load-balance loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(mask.astype(jnp.float32), axis=1)             # (G,E)
+    mean_p = jnp.mean(probs, axis=1)                              # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+
+    cap = int(max(k, capacity_factor * n * k / e))
+    cap = min(cap, n)
+    # position of each token within its expert queue
+    pos_in_e = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1     # (G,N,E)
+    keep = mask & (pos_in_e < cap)
+    disp = jax.nn.one_hot(jnp.where(keep, pos_in_e, cap), cap + 1,
+                          dtype=xg.dtype)[..., :cap]              # (G,N,E,C)
+    disp = disp * keep[..., None].astype(xg.dtype)
+
+    xe = jnp.einsum("gnec,gnd->gecd", disp, xg)                   # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(xg.dtype))
+    if "wg" in params:
+        gate_h = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(xg.dtype))
+        h = _act(cfg.act)(gate_h) * h
+    else:
+        h = _act(cfg.act)(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(xg.dtype))
+    combine = disp * gates.astype(xg.dtype)[..., None]            # (G,N,E,C)
+    y = jnp.einsum("gnec,gecd->gnd", combine, ye).reshape(b, t, d)
+
+    if "shared" in params:
+        y = y + apply_mlp(params["shared"], x, cfg.act)
+    return y, aux

@@ -1,0 +1,131 @@
+"""ResNet-34 in JAX — the paper's own experiment model (§4.1).
+
+Implemented as an explicit list of blocks so the heterogeneous partitioner
+can split it at any block boundary (the paper hand-picked splits like
+"before Layer3 Block4"); `block_costs` exposes per-block FLOPs/bytes for the
+cost model.  BatchNorm runs in batch-stats mode (training).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet34 import ResNetConfig
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _init_conv(key, k, cin, cout):
+    fan_in = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout)) * np.sqrt(2.0 / fan_in)
+
+
+def _init_bn(c):
+    return {"scale": jnp.ones((1, 1, 1, c)), "bias": jnp.zeros((1, 1, 1, c))}
+
+
+def init_resnet(cfg: ResNetConfig, key) -> Tuple[List[dict], List[dict]]:
+    """Returns (meta, params): ordered block lists.  ``meta`` holds static
+    structure (kind/stride), ``params`` holds only arrays (differentiable)."""
+    ks = iter(jax.random.split(key, 256))
+    meta: List[dict] = [{"kind": "stem"}]
+    params: List[dict] = [{
+        "conv": _init_conv(next(ks), 7, 3, cfg.channels[0]),
+        "bn": _init_bn(cfg.channels[0]),
+    }]
+    cin = cfg.channels[0]
+    for stage, (n, cout) in enumerate(zip(cfg.stages, cfg.channels)):
+        for i in range(n):
+            stride = 2 if (i == 0 and stage > 0) else 1
+            m = {"kind": "basic", "stride": stride}
+            b = {
+                "conv1": _init_conv(next(ks), 3, cin, cout),
+                "bn1": _init_bn(cout),
+                "conv2": _init_conv(next(ks), 3, cout, cout),
+                "bn2": _init_bn(cout),
+            }
+            if stride != 1 or cin != cout:
+                b["proj"] = _init_conv(next(ks), 1, cin, cout)
+                b["proj_bn"] = _init_bn(cout)
+            meta.append(m)
+            params.append(b)
+            cin = cout
+    meta.append({"kind": "head"})
+    params.append({
+        "w": jax.random.normal(next(ks), (cin, cfg.n_classes)) * cin ** -0.5,
+        "b": jnp.zeros((cfg.n_classes,)),
+    })
+    return meta, params
+
+
+def apply_block(m: dict, b: dict, x: jax.Array) -> jax.Array:
+    kind = m["kind"]
+    if kind == "stem":
+        x = jax.nn.relu(_bn(b["bn"], _conv(x, b["conv"], 2)))
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                     (1, 2, 2, 1), "SAME")
+    if kind == "basic":
+        h = jax.nn.relu(_bn(b["bn1"], _conv(x, b["conv1"], m["stride"])))
+        h = _bn(b["bn2"], _conv(h, b["conv2"]))
+        sc = x
+        if "proj" in b:
+            sc = _bn(b["proj_bn"], _conv(x, b["proj"], m["stride"]))
+        return jax.nn.relu(h + sc)
+    if kind == "head":
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ b["w"] + b["b"]
+    raise ValueError(kind)
+
+
+def forward(meta: List[dict], params: List[dict], x: jax.Array,
+            upto: int = None, start: int = 0) -> jax.Array:
+    for m, b in zip(meta[start:upto], params[start:upto]):
+        x = apply_block(m, b, x)
+    return x
+
+
+def loss_fn(params: List[dict], meta: List[dict], images: jax.Array,
+            labels: jax.Array) -> jax.Array:
+    logits = forward(meta, params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def block_costs(cfg: ResNetConfig, meta: List[dict], params: List[dict],
+                batch: int) -> List[Tuple[float, float]]:
+    """(flops, boundary_bytes) per block for the heterogeneous partitioner.
+
+    boundary_bytes = activation bytes crossing the cut AFTER this block —
+    exactly what the paper's USB link had to carry per microbatch.
+    """
+    out = []
+    hw = cfg.img_size // 4                 # after stem
+    cin = cfg.channels[0]
+    # stem
+    sf = 2 * batch * (cfg.img_size // 2) ** 2 * 7 * 7 * 3 * cfg.channels[0]
+    out.append((sf, batch * hw * hw * cin * 4))
+    for m, b in zip(meta[1:-1], params[1:-1]):
+        cout = b["conv1"].shape[-1]
+        if m["stride"] == 2:
+            hw //= 2
+        f = 2 * batch * hw * hw * 9 * (cin * cout + cout * cout)
+        if "proj" in b:
+            f += 2 * batch * hw * hw * cin * cout
+        out.append((f, batch * hw * hw * cout * 4))
+        cin = cout
+    out.append((2 * batch * cin * cfg.n_classes, batch * cfg.n_classes * 4))
+    return out

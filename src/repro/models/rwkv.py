@@ -1,0 +1,137 @@
+"""RWKV-6 (Finch) block — attention-free, data-dependent decay.
+
+Time-mixing per head (K = V = head_dim):
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+with w_t = exp(-exp(w0 + LoRA(x̃_t))) the data-dependent decay (the Finch
+novelty), and token-shift interpolation x̃ = lerp(x_t, x_{t-1}, μ).
+
+Simplifications vs the full release (documented in DESIGN §8): static μ
+token-shift per projection (r,k,v,w,g) instead of the dynamic ddlerp; decay
+LoRA rank 64.  Channel-mixing is the standard squared-relu RWKV FFN.
+
+Reference: `lax.scan` over time.  Perf path: chunked Pallas kernel
+(`repro.kernels.rwkv6_scan`).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import truncated_normal
+
+LORA_RANK = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), dtype),            # r,k,v,w,g shift mixes
+        "wr": truncated_normal(ks[0], (d, d), s, dtype),
+        "wk": truncated_normal(ks[1], (d, d), s, dtype),
+        "wv": truncated_normal(ks[2], (d, d), s, dtype),
+        "wg": truncated_normal(ks[3], (d, d), s, dtype),
+        "wo": truncated_normal(ks[4], (d, d), s, dtype),
+        "w0": jnp.full((d,), -4.0, jnp.float32),         # decay base
+        "w_lora_a": truncated_normal(ks[5], (d, LORA_RANK), s, dtype),
+        "w_lora_b": truncated_normal(ks[6], (LORA_RANK, d), LORA_RANK ** -0.5, dtype),
+        "u": truncated_normal(ks[7], (h, dh), 0.3, jnp.float32),  # bonus
+        "ln_x_scale": jnp.ones((d,), dtype),             # group-norm-ish post scale
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, d), dtype),
+        "ck": truncated_normal(ks[8], (d, cfg.d_ff), s, dtype),
+        "cv": truncated_normal(ks[9], (cfg.d_ff, d), cfg.d_ff ** -0.5, dtype),
+        "cr": truncated_normal(ks[10], (d, d), s, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """Returns x_{t-1} stream. x (B,T,D); last (B,D) from previous chunk."""
+    if last is None:
+        last = jnp.zeros_like(x[:, 0])
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state=None):
+    """Exact WKV recurrence. r/k/v (B,T,H,K); w (B,T,H,K) decay in (0,1);
+    u (H,K).  Returns (out (B,T,H,K), final state (B,H,K,K))."""
+    bsz, t, h, dk = r.shape
+    if state is None:
+        state = jnp.zeros((bsz, h, dk, dk), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                           # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,K,K)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, state, xs)
+    return outs.swapaxes(0, 1).astype(r.dtype), S
+
+
+def apply_rwkv6_tmix(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                     use_kernels: bool = False,
+                     state: Optional[dict] = None):
+    """x (B,T,D) -> (out, new_state({'S','last'}) if state given)."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    last = None if state is None else state["last"]
+    prev, new_last = _token_shift(x, last)
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (prev - x) for i in range(5))
+    r = (xr @ params["wr"]).reshape(b, t, h, dk)
+    k = (xk @ params["wk"]).reshape(b, t, h, dk)
+    v = (xv @ params["wv"]).reshape(b, t, h, dk)
+    g = jax.nn.silu(xg @ params["wg"])
+    dec = params["w0"] + (xw @ params["w_lora_a"] @ params["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, dk)    # data-dependent decay
+    S0 = None if state is None else state["S"]
+    if use_kernels and state is None:
+        from repro.kernels import ops as kops
+        out, S = kops.rwkv6_scan(r, k, v, w, params["u"])
+    else:
+        out, S = rwkv6_scan_ref(r, k, v, w, params["u"], S0)
+    out = out.reshape(b, t, d)
+    # normalise per head group (stand-in for RWKV's GroupNorm)
+    out = out * jax.lax.rsqrt(jnp.mean(out.astype(jnp.float32) ** 2, -1,
+                                       keepdims=True) + 1e-5).astype(out.dtype)
+    out = out * params["ln_x_scale"].astype(out.dtype) * g
+    out = out @ params["wo"]
+    new_state = None if state is None else {"S": S, "last": new_last}
+    return out, new_state
+
+
+def apply_rwkv6_cmix(params: dict, cfg: ModelConfig, x: jax.Array,
+                     state: Optional[dict] = None):
+    last = None if state is None else state["last_c"]
+    prev, new_last = _token_shift(x, last)
+    mu = params["mu_c"].astype(x.dtype)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    out = jax.nn.sigmoid(xr @ params["cr"]) * (kk @ params["cv"])
+    return out, new_last
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dk = d // h
+    return {
+        "S": jnp.zeros((n_layers, batch, h, dk, dk), jnp.float32),
+        "last": jnp.zeros((n_layers, batch, d), dtype),
+        "last_c": jnp.zeros((n_layers, batch, d), dtype),
+    }

@@ -1,0 +1,63 @@
+"""int8 gradient compression with error feedback — for the slow cross-pod
+links (DESIGN §3: the "pod" axis carries one gradient sync per step; int8
+quarters its wire vs bf16 all-reduce).
+
+Scheme: per-leaf absmax scaling to int8; the quantisation residual is FED
+BACK into the next step's gradient (error feedback — Karimireddy et al.
+2019 — restores convergence of biased compressors).  The codec is pure-jnp
+(jit-able inside the train step); integration point is the pod-axis sync in
+the pipeline/DP paths: quantise -> exchange int8+scale -> dequantise+mean.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (int8 values, fp32 scale).  scale = absmax/127 (0-safe)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Quantise (grads + error-feedback); returns (q_tree, scale_tree,
+    new_error_tree).  new_error = (g + e) - deq(q)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        new_e = corrected - dequantize(q, s)
+        return q, s, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat, eflat)]
+    qs = treedef.unflatten([o[0] for o in out])
+    ss = treedef.unflatten([o[1] for o in out])
+    es = treedef.unflatten([o[2] for o in out])
+    return qs, ss, es
+
+
+def decompress_tree(qs: Any, ss: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda q, s: dequantize(q, s, dtype), qs, ss)
+
+
+def init_error(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def wire_bytes_saved(grads: Any) -> Tuple[int, int]:
+    """(bf16 bytes, int8+scale bytes) for the synced tree — the 'pod' link
+    saving this codec buys (reported by bench_wire)."""
+    n = sum(g.size for g in jax.tree.leaves(grads))
+    leaves = len(jax.tree.leaves(grads))
+    return 2 * n, n + 4 * leaves

@@ -1,0 +1,113 @@
+"""Elastic mitigation policies — the paper's §5.2 proposals, implemented.
+
+Three policies the paper sketches for its thermal problem, generalised to a
+fleet:
+
+* ``SwapPolicy``       — "swapping between multiple iOS workers, letting one
+  cool down while another worked": maintain hot spares; when a worker goes
+  SERIOUS, promote a spare into its pipeline slot and send the hot one to the
+  cooling pool (re-admitted at MINIMAL).
+* ``DutyCyclePolicy``  — "regulating compute loads to short bursts": insert
+  idle fractions for hot workers (modelled as a per-worker throughput
+  multiplier the trainer applies to microbatch assignment).
+* ``RebalancePolicy``  — repartition stage boundaries with the cost model so
+  a throttled worker gets fewer layers (the paper's split-point search, rerun
+  online with updated device rates).
+
+Policies consume :class:`repro.runtime.monitor.ThermalMonitor` summaries and
+emit Actions; the trainer / simulator executes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.partition import SplitPlan, split_blocks
+from repro.hw.specs import DeviceProfile
+from repro.runtime.monitor import ThermalMonitor, ThermalState, WorkerStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str                  # swap | duty_cycle | rebalance | none
+    worker: str = ""
+    detail: dict = dataclasses.field(default_factory=dict)
+
+
+class SwapPolicy:
+    """Hot-spare promotion (paper: 'pipelining the devices themselves')."""
+
+    def __init__(self, spares: Sequence[str]):
+        self.spares: List[str] = list(spares)
+        self.cooling: List[str] = []
+
+    def step(self, monitor: ThermalMonitor) -> List[Action]:
+        actions = []
+        # re-admit cooled workers
+        for w in list(self.cooling):
+            ws = monitor.workers.get(w)
+            if ws and ws.state == ThermalState.MINIMAL:
+                self.cooling.remove(w)
+                self.spares.append(w)
+        for ws in monitor.stragglers(ThermalState.SERIOUS):
+            if ws.worker in self.cooling:
+                continue
+            if not self.spares:
+                break
+            spare = self.spares.pop(0)
+            self.cooling.append(ws.worker)
+            # the spare inherits the hot worker's telemetry slot fresh
+            monitor.workers.pop(ws.worker, None)
+            actions.append(Action("swap", ws.worker,
+                                  {"replacement": spare}))
+        return actions
+
+
+class DutyCyclePolicy:
+    """Short-burst load regulation: throttle assignment to hot workers."""
+
+    def __init__(self, serious_duty: float = 0.6, fair_duty: float = 0.85):
+        self.serious_duty = serious_duty
+        self.fair_duty = fair_duty
+
+    def step(self, monitor: ThermalMonitor) -> List[Action]:
+        actions = []
+        for ws in monitor.workers.values():
+            duty = 1.0
+            if ws.state == ThermalState.FAIR:
+                duty = self.fair_duty
+            elif ws.state in (ThermalState.SERIOUS, ThermalState.CRITICAL):
+                duty = self.serious_duty
+            if duty < 1.0:
+                actions.append(Action("duty_cycle", ws.worker, {"duty": duty}))
+        return actions
+
+
+class RebalancePolicy:
+    """Online re-split: feed throttled rates back into the cost model."""
+
+    def __init__(self, costs, devices: Sequence[DeviceProfile],
+                 efficiency: float = 0.5, train: bool = True):
+        self.costs = costs
+        self.devices = list(devices)
+        self.efficiency = efficiency
+        self.train = train
+        self.current: Optional[SplitPlan] = None
+
+    def step(self, monitor: ThermalMonitor,
+             worker_order: Sequence[str]) -> List[Action]:
+        derated = []
+        for name, dev in zip(worker_order, self.devices):
+            ws = monitor.workers.get(name)
+            rate = 1.0 / ws.slowdown if ws else 1.0
+            derated.append(dataclasses.replace(dev, flops=dev.flops * rate))
+        plan = split_blocks(self.costs, derated, self.efficiency, self.train)
+        if self.current is not None and plan.cuts == self.current.cuts:
+            return []
+        prev = self.current
+        self.current = plan
+        return [Action("rebalance", "",
+                       {"cuts": list(plan.cuts),
+                        "prev": list(prev.cuts) if prev else None,
+                        "bottleneck_s": plan.bottleneck})]

@@ -1,0 +1,37 @@
+"""Fault / throttle injection for testing the runtime (no real failures on
+a 1-CPU container; a real fleet raises the same exceptions from XLA)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, worker: str, step: int):
+        super().__init__(f"worker {worker} failed at step {step}")
+        self.worker = worker
+        self.step = step
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """fail_at: step -> worker ; throttle: worker -> (start_step, factor, tau)"""
+    fail_at: Dict[int, str] = dataclasses.field(default_factory=dict)
+    throttle: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            raise WorkerFailure(self.fail_at.pop(step), step)
+
+    def slowdown(self, worker: str, step: int) -> float:
+        """Thermal-curve multiplier (paper Fig. 6 shape: ramp to plateau)."""
+        if worker not in self.throttle:
+            return 1.0
+        start, factor, tau = self.throttle[worker]
+        if step < start:
+            return 1.0
+        import math
+
+        ramp = 1.0 - math.exp(-(step - start) / max(tau, 1e-9))
+        return 1.0 + (factor - 1.0) * ramp

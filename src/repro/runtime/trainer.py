@@ -1,0 +1,110 @@
+"""Fault-tolerant training loop.
+
+Wires together: step builder (any strategy) -> data pipeline -> async
+wire-codec checkpoints -> thermal monitor -> mitigation policies -> failure
+recovery (restore latest checkpoint and resume, repartitioning if the fleet
+changed).  Designed so the same loop drives a 2-device CPU test and a
+512-chip pod (the step function and mesh are injected).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore
+from repro.runtime.faults import FaultPlan, WorkerFailure
+from repro.runtime.monitor import ThermalMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    max_restarts: int = 3
+    worker_name: str = "worker0"
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainerConfig, step_fn: Callable,
+                 init_state: Callable[[], tuple],
+                 data_iter_fn: Callable[[int], Iterator],
+                 shardings: Any = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 on_metrics: Optional[Callable[[int, dict], None]] = None):
+        """init_state() -> (params, opt_state); data_iter_fn(start_step)
+        yields batches; step_fn(params, opt, batch) -> (params, opt, metrics)."""
+        self.cfg = tcfg
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.data_iter_fn = data_iter_fn
+        self.shardings = shardings
+        self.faults = fault_plan or FaultPlan()
+        self.monitor = ThermalMonitor()
+        self.ckpt = AsyncCheckpointer(Path(tcfg.ckpt_dir))
+        self.on_metrics = on_metrics
+        self.history: List[dict] = []
+        self.restarts = 0
+
+    # ------------------------------------------------------------------
+    def _start_state(self):
+        params, opt = self.init_state()
+        start = 0
+        last = latest_step(Path(self.cfg.ckpt_dir))
+        if last is not None:
+            tree, extra = restore(Path(self.cfg.ckpt_dir), last,
+                                  like={"params": params, "opt": opt},
+                                  shardings=self.shardings)
+            params, opt = tree["params"], tree["opt"]
+            start = int(extra.get("next_step", last))
+            print(f"[trainer] restored step {last}, resuming at {start}")
+        return params, opt, start
+
+    def run(self) -> Dict[str, Any]:
+        while True:
+            try:
+                return self._run_once()
+            except WorkerFailure as e:
+                self.restarts += 1
+                print(f"[trainer] {e} — restart {self.restarts}/"
+                      f"{self.cfg.max_restarts}")
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+
+    def _run_once(self) -> Dict[str, Any]:
+        params, opt, start = self._start_state()
+        data = self.data_iter_fn(start)
+        losses = []
+        for step in range(start, self.cfg.total_steps):
+            batch = next(data)
+            self.faults.check(step)                       # injected failures
+            t0 = time.perf_counter()
+            params, opt, metrics = self.step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            dt *= self.faults.slowdown(self.cfg.worker_name, step)
+            ws = self.monitor.observe(self.cfg.worker_name, dt)
+            losses.append(loss)
+            rec = dict(step=step, loss=loss, step_s=dt,
+                       thermal=ws.state.value, slowdown=round(ws.slowdown, 4))
+            self.history.append(rec)
+            if self.on_metrics:
+                self.on_metrics(step, rec)
+            if step % self.cfg.log_every == 0:
+                print(f"[trainer] step {step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms, {ws.state.value})")
+            if (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(step + 1,
+                                     {"params": params, "opt": opt},
+                                     extra={"next_step": step + 1})
+        self.ckpt.wait()
+        return {"params": params, "opt": opt,
+                "losses": losses, "history": self.history}

@@ -1,0 +1,63 @@
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    store.save(tmp_path, 5, t, extra={"next_step": 5})
+    out, extra = store.restore(tmp_path, like=t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["next_step"] == 5
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        store.save(tmp_path, s, t, keep=3)
+    assert store.latest_step(tmp_path) == 5
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 3
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(tmp_path)
+    ck.save_async(10, _tree(), extra={"next_step": 10})
+    ck.wait()
+    assert store.latest_step(tmp_path) == 10
+    out, _ = store.restore(tmp_path, like=_tree())
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree()["a"]))
+
+
+def test_corruption_detected(tmp_path):
+    store.save(tmp_path, 1, _tree())
+    shard = next(tmp_path.glob("step_*/shard_0.bin"))
+    data = bytearray(shard.read_bytes())
+    data[40] ^= 0xFF
+    shard.write_bytes(bytes(data))
+    with pytest.raises(Exception):
+        store.restore(tmp_path, like=_tree())
+
+
+def test_reshard_dtype_cast(tmp_path):
+    t = _tree()
+    store.save(tmp_path, 1, t)
+    like = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32)
+                        if a.dtype == jnp.bfloat16 else a, t)
+    out, _ = store.restore(tmp_path, like=like)
+    assert out["b"]["c"].dtype == np.float32

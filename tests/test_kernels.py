@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as kref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.mamba2_ssd import mamba2_ssd_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.rwkv6_scan import rwkv6_chunked_fwd
+
+KEY = jax.random.key(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("b,t,h,g,d,causal,chunk", [
+    (2, 256, 4, 2, 32, True, 0),
+    (1, 200, 4, 4, 64, True, 0),        # MHA + ragged T
+    (2, 256, 8, 2, 64, True, 64),       # chunked-local (llama4)
+    (1, 128, 2, 1, 32, False, 0),       # non-causal (whisper encoder)
+    (1, 96, 6, 3, 128, True, 0),        # head_dim 128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, t, h, g, d, causal, chunk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, g, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, g, d)).astype(dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, chunk=chunk,
+                              block_q=64, block_k=128, interpret=True)
+    ref = kref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                   v.astype(jnp.float32), causal=causal,
+                                   chunk=chunk)
+    err = float(jnp.abs(out.astype(jnp.float32) - ref).max())
+    assert err < _tol(dtype), err
+
+
+@given(st.integers(1, 3), st.integers(16, 160), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2]), st.sampled_from([32, 64]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(b, t, h, gdiv, d):
+    g = h // gdiv
+    ks = jax.random.split(jax.random.key(t * h + b), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, g, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, g, d), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=64,
+                              interpret=True)
+    ref = kref.flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.abs(out - ref).max()) < 3e-5
+
+
+@pytest.mark.parametrize("b,t,h,dk,chunk", [
+    (2, 128, 4, 32, 32), (1, 100, 2, 64, 64), (2, 64, 3, 16, 16)])
+def test_rwkv6(b, t, h, dk, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, t, h, dk), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, h, dk), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, h, dk), jnp.float32)
+    dec = -jnp.exp(jax.random.normal(ks[3], (b, t, h, dk)) * 0.5 - 1.0)
+    u = 0.3 * jax.random.normal(ks[4], (h, dk))
+    out = rwkv6_chunked_fwd(r, k, v, dec, u, chunk=chunk, interpret=True)
+    ref, _ = kref.rwkv6_scan_ref(r, k, v, jnp.exp(dec), u)
+    rel = float(jnp.abs(out - ref).max()) / (float(jnp.abs(ref).max()) + 1e-9)
+    assert rel < 3e-5
+
+
+@pytest.mark.parametrize("b,t,h,p,n,chunk", [
+    (2, 96, 3, 32, 16, 32), (1, 64, 2, 64, 32, 16), (2, 50, 4, 16, 8, 25)])
+def test_mamba2_ssd(b, t, h, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, t, n), jnp.float32)
+    D = jnp.ones((h,))
+    y, S = mamba2_ssd_fwd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    yr, Sr = kref.mamba2_scan_ref(x, dt, A, B, C, D)
+    assert float(jnp.abs(y - yr).max()) / (float(jnp.abs(yr).max()) + 1e-9) < 3e-5
+    assert float(jnp.abs(S - Sr).max()) / (float(jnp.abs(Sr).max()) + 1e-9) < 3e-5
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (130, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(KEY, shape).astype(dtype)
+    s = 1.0 + 0.1 * jax.random.normal(jax.random.key(1), (shape[-1],))
+    out = rmsnorm_fwd(x, s.astype(dtype), block_rows=32, interpret=True)
+    ref = kref.rmsnorm_ref(x, s.astype(dtype))
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - ref.astype(jnp.float32)).max()) < _tol(dtype)
+
+
+@pytest.mark.parametrize("b,h,g,d,span", [(2, 4, 2, 32, 96), (1, 8, 8, 64, 64)])
+def test_decode_attention(b, h, g, d, span):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    ck = jax.random.normal(ks[1], (b, span, g, d), jnp.float32)
+    cv = jax.random.normal(ks[2], (b, span, g, d), jnp.float32)
+    pos = jax.random.randint(ks[3], (b,), 1, span)
+    valid = jnp.arange(span)[None] <= pos[:, None]
+    out = decode_attention_fwd(q, ck, cv, valid, scale=d ** -0.5,
+                               block_s=32, interpret=True)
+    ref = kref.decode_attention_ref(q, ck, cv, valid, d ** -0.5)
+    assert float(jnp.abs(out - ref).max()) < 3e-5
+
+
+def test_flash_custom_vjp_grads():
+    """ops.flash_attention gradient == oracle gradient."""
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+    g1 = jax.grad(lambda q: ops.flash_attention(q, k, v, True, None, 0).sum())(q)
+    g2 = jax.grad(lambda q: kref.flash_attention_ref(q, k, v, causal=True).sum())(q)
+    assert float(jnp.abs(g1 - g2).max()) < 3e-5

@@ -1,0 +1,48 @@
+"""Split-tool FIFO semantics + overlap (paper §3.6/§4.3)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.offload.tools import ToolExecutor
+from repro.offload.vectordb import VectorDB
+
+
+def test_vectordb_topk_correct():
+    db = VectorDB(n_docs=500, dim=32, seed=1)
+    q = db.encode("query")
+    out = db.search(q, 7)
+    scores = db.embeddings @ q
+    want = np.argsort(-scores)[:7]
+    np.testing.assert_array_equal(out[:, 0].astype(int), want)
+    assert np.all(np.diff(out[:, 1]) <= 1e-6)
+
+
+def test_fifo_order():
+    ex = ToolExecutor(n_workers=1)
+    ex.register("t", lambda x: np.asarray([x]), simulated_seconds=0.01)
+    for i in range(4):
+        ex.begin("t", x=i)
+    got = [int(ex.retrieve()[0]) for _ in range(4)]
+    assert got == [0, 1, 2, 3]                 # oldest first (paper FIFO)
+    with pytest.raises(LookupError):
+        ex.retrieve()
+
+
+def test_overlap_eliminates_wait():
+    ex = ToolExecutor(n_workers=3)
+    ex.register("slow", lambda: np.zeros(1), simulated_seconds=0.25)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ex.begin("slow")
+    time.sleep(0.3)                            # "reasoning" while tools run
+    for _ in range(3):
+        ex.retrieve()
+    assert time.perf_counter() - t0 < 0.55     # serial would be >= 0.75
+
+
+def test_wire_payload_roundtrip():
+    ex = ToolExecutor(n_workers=1, wire=True)
+    ex.register("echo", lambda x: np.asarray(x) * 2, simulated_seconds=0.0)
+    ex.begin("echo", x=np.arange(5))
+    np.testing.assert_array_equal(ex.retrieve(), np.arange(5) * 2)

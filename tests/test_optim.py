@@ -1,0 +1,41 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+
+
+def test_quadratic_descent():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=0, schedule="const",
+                            weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    opt = adamw.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.update(cfg, g, opt, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clipping():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=0, schedule="const")
+    params = {"w": jnp.zeros(4)}
+    opt = adamw.init(params)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, stats = adamw.update(cfg, g, opt, params)
+    assert float(stats["grad_norm"]) > 100
+
+
+def test_schedule_shapes():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            schedule="cosine")
+    lrs = [float(adamw.lr_at(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0            # warmup rises
+    assert lrs[99] < 0.01                    # decays to ~0
+    assert max(lrs) <= 1.0
+
+
+def test_moments_dtype_fp32():
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    opt = adamw.init(params)
+    assert opt["m"]["w"].dtype == jnp.float32

@@ -1,0 +1,73 @@
+"""Heterogeneous partitioner: reproduces the paper's split decisions."""
+import jax
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.resnet34 import CONFIG
+from repro.core.partition import (pipeline_batch_seconds, plan_pipeline,
+                                  single_device_seconds, split_blocks)
+from repro.hw.specs import IPHONE_11_PRO, IPHONE_16, XEON_E3_1225V3
+from repro.models.resnet import block_costs, init_resnet
+
+
+def _costs():
+    meta, params = init_resnet(CONFIG, jax.random.key(0))
+    return block_costs(CONFIG, meta, params, batch=16)   # paper microbatch 16
+
+
+def test_paper_reproduction_calibrated():
+    """Validate against the paper's OWN numbers (appendix A.1): rates
+    calibrated on the desktop pairs must predict the HELD-OUT pairs
+    (mac+iPhone16 train; desktop+iPhone11 inference) within 25%.
+    (The paper's Table-1 TFLOPS ratings alone CANNOT reproduce its timings
+    — the Xeon sustains 3.5x its rated flops — recorded in EXPERIMENTS.md.)"""
+    from repro.core.calibrate import reproduction_table
+    rows = {r["setup"]: r for r in reproduction_table()}
+    for name in ("desktop_alone", "mac_alone", "desktop_iph11",
+                 "desktop_iph16"):
+        assert rows[name]["rel_err"] < 0.02, rows[name]      # fit quality
+    for name in ("mac_iph16", "desktop_alone_infer", "desktop_iph11_infer"):
+        assert rows[name]["held_out"] and rows[name]["rel_err"] < 0.25,             rows[name]
+    # paper's headline ordering: iPhone16 helps more than iPhone11
+    assert rows["desktop_iph16"]["predicted_s"] < rows["desktop_iph11"]["predicted_s"]
+
+
+def test_paper_split_region():
+    """Stronger phone -> cut no later (paper: iPhone16 took MORE layers);
+    calibrated rates put both cuts strictly inside the block list."""
+    from repro.core.calibrate import calibrated_profiles
+    costs = _costs()
+    profs = calibrated_profiles()
+    c11 = split_blocks(costs, [profs["xeon"], profs["iphone11"]],
+                       efficiency=1.0).cuts[0]
+    c16 = split_blocks(costs, [profs["xeon"], profs["iphone16"]],
+                       efficiency=1.0).cuts[0]
+    assert c16 <= c11
+    assert 0 < c16 <= c11 < len(costs)
+
+
+@given(st.integers(2, 4), st.integers(5, 18), st.integers(1, 100))
+@settings(max_examples=30, deadline=None)
+def test_split_invariants(n_dev, n_blocks, seed):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    costs = [(float(f), float(b)) for f, b in
+             zip(rng.uniform(1e9, 1e11, n_blocks), rng.uniform(1e4, 1e7, n_blocks))]
+    devs = [XEON_E3_1225V3, IPHONE_11_PRO, IPHONE_16, IPHONE_16][:n_dev]
+    plan = split_blocks(costs, devs)
+    assert len(plan.cuts) == n_dev - 1
+    assert list(plan.cuts) == sorted(set(plan.cuts))
+    assert all(0 < c < n_blocks for c in plan.cuts)
+    # bottleneck really is the max
+    assert abs(plan.bottleneck
+               - max(s + (plan.comm_seconds[i] if i < n_dev - 1 else 0)
+                     for i, s in enumerate(plan.stage_seconds))) < 1e-12
+
+
+@given(st.integers(2, 96), st.sampled_from([4, 8, 16]))
+@settings(max_examples=40, deadline=None)
+def test_plan_pipeline_invariants(n_layers, model_axis):
+    plan = plan_pipeline(n_layers, model_axis)
+    assert plan.n_stages * plan.replicas == model_axis
+    assert plan.slots >= n_layers
+    assert plan.n_pad == plan.slots - n_layers
+    assert plan.n_pad < plan.n_stages       # never a whole empty stage

@@ -1,0 +1,75 @@
+"""Thermal monitor + mitigation policies + fault plan (paper §4.2/§5.2)."""
+import jax
+
+from repro.core.partition import split_blocks
+from repro.hw.specs import IPHONE_11_PRO, IPHONE_16, XEON_E3_1225V3
+from repro.runtime.elastic import DutyCyclePolicy, RebalancePolicy, SwapPolicy
+from repro.runtime.faults import FaultPlan, WorkerFailure
+from repro.runtime.monitor import ThermalMonitor, ThermalState
+
+
+def _heat(mon, worker, base, curve):
+    for x in curve:
+        mon.observe(worker, base * x)
+
+
+def test_thermal_states_paper_curve():
+    """Paper Fig. 6: Minimal -> Fair (~batch 13) -> Serious (~batch 17)."""
+    mon = ThermalMonitor(alpha=0.5, calibration_steps=3, warmup_skip=1)
+    curve = [1.15] + [1.0] * 10 + [1.03] * 4 + [1.10] * 6
+    _heat(mon, "iphone", 15.3, curve)
+    hist = mon.workers["iphone"].state_history
+    assert hist[5] == ThermalState.MINIMAL
+    assert ThermalState.FAIR in hist
+    assert mon.workers["iphone"].state in (ThermalState.SERIOUS,
+                                           ThermalState.CRITICAL)
+
+
+def test_swap_policy():
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    pol = SwapPolicy(spares=["spare0"])
+    _heat(mon, "w0", 1.0, [1.0, 1.0, 1.30, 1.30])
+    acts = pol.step(mon)
+    assert acts and acts[0].kind == "swap"
+    assert acts[0].detail["replacement"] == "spare0"
+    assert "w0" in pol.cooling and not pol.spares
+
+
+def test_duty_cycle_policy():
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    _heat(mon, "w0", 1.0, [1.0, 1.0, 1.10])
+    acts = DutyCyclePolicy().step(mon)
+    assert acts and acts[0].kind == "duty_cycle"
+    assert acts[0].detail["duty"] < 1.0
+
+
+def test_rebalance_policy_moves_cut():
+    """A throttled worker must get FEWER layers after rebalance — the
+    paper's split-point search rerun online (calibrated device rates)."""
+    from repro.core.calibrate import calibrated_profiles, resnet_costs
+    costs = resnet_costs()
+    profs = calibrated_profiles()
+    pol = RebalancePolicy(costs, [profs["xeon"], profs["iphone16"]],
+                          efficiency=1.0)
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    _heat(mon, "host", 1.0, [1.0, 1.0])
+    _heat(mon, "phone", 1.0, [1.0, 1.0])
+    a0 = pol.step(mon, ["host", "phone"])
+    assert a0 and a0[0].kind == "rebalance"
+    cut0 = a0[0].detail["cuts"][0]
+    _heat(mon, "phone", 1.0, [2.5, 2.5, 2.5, 2.5])   # phone throttles hard
+    a1 = pol.step(mon, ["host", "phone"])
+    assert a1, "expected a re-split"
+    assert a1[0].detail["cuts"][0] > cut0            # phone's share shrank
+
+
+def test_fault_plan():
+    fp = FaultPlan(fail_at={3: "w0"}, throttle={"w0": (0, 1.5, 2)})
+    fp.check(2)
+    try:
+        fp.check(3)
+        assert False
+    except WorkerFailure as e:
+        assert e.worker == "w0"
+    assert fp.slowdown("w0", 0) == 1.0
+    assert 1.4 < fp.slowdown("w0", 50) <= 1.5

@@ -1,0 +1,69 @@
+"""Wire codec (paper Fig. 2): roundtrip + integrity properties."""
+import io
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wire import codec
+
+DTYPES = [np.float32, np.float64, np.float16, np.int8, np.int32, np.int64,
+          np.uint8, np.uint16, np.bool_]
+
+
+@given(st.integers(0, len(DTYPES) - 1),
+       st.lists(st.integers(0, 7), min_size=0, max_size=4),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tensor_roundtrip(dti, shape, seed):
+    rng = np.random.default_rng(seed)
+    dt = DTYPES[dti]
+    arr = (rng.standard_normal(shape) * 10).astype(dt)
+    buf = io.BytesIO()
+    codec.encode_tensor(arr, buf)
+    buf.seek(0)
+    out = codec.decode_tensor(buf)
+    np.testing.assert_array_equal(arr, out)
+    assert out.dtype == arr.dtype
+
+
+def test_bfloat16_roundtrip():
+    import ml_dtypes
+    arr = np.arange(-8, 8, 0.5, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    out = codec.loads(codec.dumps({"x": arr}))
+    np.testing.assert_array_equal(arr.view(np.uint16), out["x"].view(np.uint16))
+
+
+@given(st.recursive(
+    st.just(None) | st.integers(0, 3).map(
+        lambda s: np.arange(max(s, 1), dtype=np.float32)),
+    lambda inner: st.lists(inner, max_size=3).map(tuple)
+    | st.dictionaries(st.sampled_from("abcd"), inner, max_size=3),
+    max_leaves=8))
+@settings(max_examples=30, deadline=None)
+def test_pytree_roundtrip(tree):
+    out = codec.loads(codec.dumps(tree))
+    import jax
+    l1, d1 = jax.tree.flatten(tree)
+    l2, d2 = jax.tree.flatten(out)
+    assert d1 == d2
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(20, 300), st.integers(0, 255))
+@settings(max_examples=25, deadline=None)
+def test_corruption_detected(pos, val):
+    data = bytearray(codec.dumps({"a": np.arange(64, dtype=np.float32)}))
+    pos = min(pos, len(data) - 5)
+    if data[pos] == val:
+        val = (val + 1) % 256
+    data[pos] = val
+    with pytest.raises(codec.WireError):
+        codec.loads(bytes(data))
+
+
+def test_truncation_detected():
+    data = codec.dumps({"a": np.arange(64, dtype=np.float32)})
+    with pytest.raises(codec.WireError):
+        codec.loads(data[:-6])
