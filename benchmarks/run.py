@@ -9,8 +9,8 @@ import sys
 import traceback
 
 from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
-                        bench_schedules, bench_thermal, bench_tool_parallel,
-                        bench_wire, roofline_report)
+                        bench_schedules, bench_serving, bench_thermal,
+                        bench_tool_parallel, bench_wire, roofline_report)
 
 ALL = {
     "devices": bench_devices.main,          # paper Table 1
@@ -21,6 +21,7 @@ ALL = {
     "wire": bench_wire.main,                # paper Fig. 2 protocol
     "kernels": bench_kernels.main,          # Pallas kernel budgets
     "roofline": roofline_report.main,       # §Roofline table from dry-run
+    "serving": bench_serving.main,          # engine under load (ROADMAP)
 }
 
 

@@ -16,11 +16,21 @@ import numpy as np
 from jax.sharding import Mesh
 
 
+def compat_make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer jax; older releases use
+    plain Auto axes implicitly."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(shape: Tuple[int, ...] = None,
@@ -32,8 +42,7 @@ def make_host_mesh(shape: Tuple[int, ...] = None,
     if shape is None:
         shape = (1, n)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

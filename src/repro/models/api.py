@@ -7,6 +7,12 @@
     logits, cache = model.decode_step(params, cache, tokens)
     specs = model.input_specs(shape)
 
+Optional serving hook: ``prefill_ragged(params, batch, lengths, max_len)``
+prefills a batch of right-padded prompts in ONE call, returning per-lane
+last-real-token logits and a cache with per-lane ``pos``.  It is only set
+when padding is provably inert (full causal attention, no recurrent state);
+callers must fall back to per-request ``prefill`` when it is ``None``.
+
 Families: decoder-only (dense/moe/ssm/hybrid/vlm) -> repro.models.lm;
 enc-dec (audio/whisper) -> repro.models.encdec.
 """
@@ -34,6 +40,9 @@ class Model:
     decode_step: Callable[[dict, dict, jax.Array], Tuple[jax.Array, dict]]
     init_cache: Callable[[int, int], dict]
     input_specs: Callable[[ShapeConfig], Dict[str, Any]]
+    prefill_ragged: Optional[
+        Callable[[dict, Dict[str, jax.Array], jax.Array, int],
+                 Tuple[jax.Array, dict]]] = None
 
 
 def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
@@ -49,6 +58,13 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
             init_cache=lambda bsz, ml: ED.init_encdec_cache(cfg, bsz, ml, cdt),
             input_specs=lambda s: ED.encdec_input_specs(cfg, s, rcfg),
         )
+    # right-padded batched prefill is exact only when pad tokens cannot leak
+    # into real lanes: full causal attention, no recurrent state, no frontend.
+    # MoE is excluded too — pad tokens compete for (and resize) expert
+    # capacity, perturbing real tokens' routing vs an exact-length prefill.
+    ragged_ok = (cfg.family == "dense" and not cfg.rwkv
+                 and cfg.attention == "full" and not cfg.frontend
+                 and not cfg.n_enc_layers)
     return Model(
         cfg=cfg, rcfg=rcfg,
         init=lambda key: LM.init_lm(cfg, key, pdt),
@@ -57,4 +73,7 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
         decode_step=lambda p, c, t: LM.lm_decode_step(cfg, p, c, t, rcfg),
         init_cache=lambda bsz, ml: LM.init_cache(cfg, bsz, ml, cdt),
         input_specs=lambda s: LM.input_specs(cfg, s, rcfg),
+        prefill_ragged=(
+            (lambda p, b, ln, ml: LM.lm_prefill_ragged(cfg, p, b, ln, rcfg, ml))
+            if ragged_ok else None),
     )

@@ -141,9 +141,10 @@ def lm_loss(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
 # prefill
 # ---------------------------------------------------------------------------
 
-def lm_prefill(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
-               rcfg: RunConfig, max_len: int) -> Tuple[jax.Array, dict]:
-    """Process a prompt; return (last-token logits (B, Vp), cache)."""
+def _prefill_trunk(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
+                   rcfg: RunConfig, max_len: int):
+    """Shared prompt forward: returns (hidden (B,T,D) post-final-norm,
+    layer_caches, (ak, av) or None)."""
     from repro.models.attention import cache_span
 
     cdt = _dt(rcfg.compute_dtype)
@@ -185,10 +186,44 @@ def lm_prefill(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
     else:
         x = carry
     x = rmsnorm(params["final_ln"], x)
+    return x, layer_caches, ((ak, av) if n_attn else None)
+
+
+def lm_prefill(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
+               rcfg: RunConfig, max_len: int) -> Tuple[jax.Array, dict]:
+    """Process a prompt; return (last-token logits (B, Vp), cache)."""
+    cdt = _dt(rcfg.compute_dtype)
+    x, layer_caches, attn = _prefill_trunk(cfg, params, batch, rcfg, max_len)
+    bsz, t = x.shape[:2]
     logits = x[:, -1] @ head_weight(cfg, params, cdt)
     cache = {"layers": layer_caches, "pos": jnp.full((bsz,), t, jnp.int32)}
-    if n_attn:
-        cache["ak"], cache["av"] = ak, av
+    if attn is not None:
+        cache["ak"], cache["av"] = attn
+    return logits, cache
+
+
+def lm_prefill_ragged(cfg: ModelConfig, params: dict,
+                      batch: Dict[str, jax.Array], lengths: jax.Array,
+                      rcfg: RunConfig, max_len: int) -> Tuple[jax.Array, dict]:
+    """Batched prefill of right-padded prompts with true ``lengths`` (B,).
+
+    Exact for full causal attention: pad tokens sit strictly AFTER every real
+    token, so causality keeps them out of all real hidden states, the logits
+    are gathered at each lane's last real position, and the per-lane cache
+    ``pos`` masks the pad garbage out of decode until the very step that
+    overwrites it.  Recurrent families (ssm / rwkv / hybrid) fold pad tokens
+    into their state, so the engine must not route them here — build_model
+    only wires this hook for eligible configs.
+    """
+    cdt = _dt(rcfg.compute_dtype)
+    x, layer_caches, attn = _prefill_trunk(cfg, params, batch, rcfg, max_len)
+    bsz = x.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    h = x[jnp.arange(bsz), lengths - 1]
+    logits = h @ head_weight(cfg, params, cdt)
+    cache = {"layers": layer_caches, "pos": lengths}
+    if attn is not None:
+        cache["ak"], cache["av"] = attn
     return logits, cache
 
 

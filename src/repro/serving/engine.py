@@ -1,24 +1,43 @@
-"""Serving engine: continuous-batching KV-cache decode.
+"""Serving engine: continuous-batching KV-cache decode with batched prefill.
 
-Slots: a fixed max_batch of cache lanes; requests are admitted into free
-slots (prefill computes a batch-1 cache that is pasted into the lane),
-decode advances every active lane one token per step, finished lanes free
-immediately (continuous batching).  Works for every decoder-only family and
-whisper (enc-dec) through the Model protocol.
+Slots: a fixed max_batch of cache lanes; queued requests are admitted into
+free lanes by a pluggable :mod:`scheduler` policy, decode advances every
+active lane one token per step, finished lanes free immediately (continuous
+batching).  Works for every decoder-only family and whisper (enc-dec)
+through the Model protocol.
+
+Prefill is **bucketed and batched**: prompts are right-padded to a small set
+of length buckets and several admissions share ONE jitted
+``model.prefill_ragged`` dispatch (exact for full-causal-attention configs —
+see :func:`repro.models.lm.lm_prefill_ragged`), whose per-lane caches are
+then pasted into their decode lanes.  Families where padding would perturb
+the state (ssm / rwkv / hybrid / enc-dec), and requests carrying extra
+model inputs, fall back to the per-request exact-length prefill.
+
+Decoding is per-request :class:`~repro.serving.sampling.SamplingParams`
+(greedy / temperature / top-k / top-p, seeded per-lane PRNG streams), and a
+:class:`~repro.serving.metrics.MetricsCollector` keeps TTFT / TPOT /
+throughput / utilisation accounting; ``metrics_snapshot()`` returns the
+structured reading.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig
 from repro.models.api import Model
+from repro.serving.metrics import EngineSnapshot, MetricsCollector
+from repro.serving.sampling import (GREEDY, LaneSampling, SamplingParams,
+                                    sample_tokens)
+from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
+
+PAD_ID = 0
 
 
 @dataclasses.dataclass
@@ -31,70 +50,211 @@ class Request:
     submitted_t: float = 0.0
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    sampling: SamplingParams = GREEDY
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    admitted_t: Optional[float] = None
+
+
+def default_buckets(max_len: int, smallest: int = 16) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to max_len."""
+    out, b = [], smallest
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int, max_len: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 max_prefill_batch: int = 8):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.queue: List[Request] = []
+        # logit width is pad_vocab(vocab); the pad columns carry real random
+        # head weights, so sampling must be restricted to the true vocab
+        self.vocab = int(model.cfg.vocab_size)
+        self.scheduler = AdmissionScheduler(scheduler)
+        self.buckets = tuple(sorted(prefill_buckets)) if prefill_buckets \
+            else default_buckets(max_len)
+        if self.buckets[-1] > max_len:
+            raise ValueError(
+                f"prefill bucket {self.buckets[-1]} exceeds max_len "
+                f"{max_len}: prefilling past the cache span would drop "
+                f"real prompt K/V")
+        self.max_prefill_batch = max(1, min(max_prefill_batch, max_batch))
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.cache = model.init_cache(max_batch, max_len)
-        self.positions = jnp.zeros((max_batch,), jnp.int32)
+        self.lane_sampling = LaneSampling.empty(max_batch)
         self._rid = 0
         self.steps = 0
         self.finished: List[Request] = []
+        self.metrics = MetricsCollector(n_slots=max_batch)
 
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self._prefill1 = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
+        if model.prefill_ragged is not None:
+            self._prefill_n = jax.jit(
+                lambda p, toks, lens: model.prefill_ragged(
+                    p, {"tokens": toks}, lens, max_len))
+        else:
+            self._prefill_n = None
 
-        def paste(cache, one_cache, slot):
-            """Insert a batch-1 cache into lane ``slot``."""
-            def fix(dst, src):
-                if np.ndim(dst) == 0 or dst.shape == src.shape:
+        # Locate each cache leaf's lane axis ONCE by diffing the shapes of
+        # two abstract caches that differ only in batch (-1 = no lane axis,
+        # e.g. scalars shared across lanes).
+        s_a = jax.eval_shape(lambda: model.init_cache(max_batch, max_len))
+        s_b = jax.eval_shape(lambda: model.init_cache(max_batch + 1, max_len))
+
+        def lane_axis(a, b):
+            for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
+                if da != db:
+                    return ax
+            return -1
+
+        self._lane_ax = jax.tree.map(lane_axis, s_a, s_b)
+
+        def paste(cache, src_cache, src_lane, dst_slot):
+            """Copy lane ``src_lane`` of a prefill cache into decode lane
+            ``dst_slot``.  Lane indices are traced, so every admission
+            reuses one compile per source-batch shape."""
+            def fix(ax, dst, src):
+                if ax < 0:
                     return dst
-                # find the lane dim: first dim where dst==max_batch, src==1
-                for ax in range(src.ndim):
-                    if src.shape[ax] == 1 and dst.shape[ax] == self.max_batch:
-                        idx = [0] * src.ndim
-                        idx[ax] = slot
-                        return jax.lax.dynamic_update_slice(
-                            dst, src.astype(dst.dtype), tuple(idx))
-                return dst
-            # note: "pos" is (max_batch,) vs (1,) and is pasted per-lane by
-            # the same rule as every other cache leaf
-            return jax.tree.map(fix, cache, one_cache)
+                piece = jax.lax.dynamic_index_in_dim(src, src_lane, axis=ax,
+                                                     keepdims=True)
+                idx = tuple(dst_slot if i == ax else 0
+                            for i in range(dst.ndim))
+                return jax.lax.dynamic_update_slice(
+                    dst, piece.astype(dst.dtype), idx)
+            return jax.tree.map(fix, self._lane_ax, cache, src_cache)
 
-        self._paste = jax.jit(paste, static_argnums=2, donate_argnums=0)
+        self._paste = jax.jit(paste, donate_argnums=0)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int = 16, **extra) -> int:
+    # submission / admission
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               sampling: Optional[SamplingParams] = None, priority: int = 0,
+               deadline_s: Optional[float] = None, **extra) -> Optional[int]:
+        """Queue a request; returns its rid, or None if admission control
+        rejected it (queue at max_queue)."""
         rid = self._rid
         self._rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new,
-                                  extra, submitted_t=time.perf_counter()))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new, extra,
+                      submitted_t=time.perf_counter(),
+                      sampling=sampling or GREEDY, priority=priority,
+                      deadline_s=deadline_s)
+        if not self.scheduler.push(req, req.submitted_t):
+            return None
         return rid
 
-    def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt[None])}
-            for k, v in req.extra.items():
-                batch[k] = jnp.asarray(v[None])
-            logits, one_cache = self._prefill1(self.params, batch)
-            tok = int(jnp.argmax(logits[0]))
+    def _bucket_len(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        # past the largest bucket: pad to max_len rather than compiling a
+        # fresh prefill executable per distinct prompt length
+        return self.max_len
+
+    def _admit_group(self, reqs: List[Request], slots: List[int],
+                     logits: jax.Array, group_cache, now: float) -> None:
+        """Sample all first tokens in ONE dispatch, then paste each lane."""
+        ls = self.lane_sampling
+        for req, slot in zip(reqs, slots):
+            ls.set_lane(slot, req.sampling)
+        idx = np.asarray(slots)
+        toks, new_kd = sample_tokens(logits[:, :self.vocab],
+                                     jnp.asarray(ls.temperature[idx]),
+                                     jnp.asarray(ls.top_k[idx]),
+                                     jnp.asarray(ls.top_p[idx]),
+                                     jnp.asarray(ls.key[idx]))
+        toks, new_kd = np.asarray(toks), np.asarray(new_kd)
+        t_first = time.perf_counter()
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            ls.key[slot] = new_kd[j]
+            tok = int(toks[j])
             req.out_tokens.append(tok)
-            req.first_token_t = time.perf_counter()
-            self.cache = self._paste(self.cache, one_cache, slot)
+            req.first_token_t = t_first
+            req.admitted_t = now
+            self.metrics.on_admit(req, now)
+            if req.max_new <= 1 or tok == self.eos_id:
+                # finished at admission: never occupies a decode lane
+                req.done_t = t_first
+                ls.clear_lane(slot)
+                self.finished.append(req)
+                self.metrics.on_finish(req, t_first)
+                continue
+            self.cache = self._paste(self.cache, group_cache,
+                                     jnp.int32(j), jnp.int32(slot))
             self.slots[slot] = req
 
+    def _admit(self) -> None:
+        # loop: requests that finish AT admission (max_new=1 / instant EOS)
+        # leave their lane idle — refill it this round, not next step
+        while self._admit_once():
+            pass
+
+    def _admit_once(self) -> bool:
+        """One admission round; True if a lane freed up again (re-admit)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return False
+        now = time.perf_counter()
+        batch = self.scheduler.pop(len(free), now)
+        if not batch:
+            return False
+        n_done_before = len(self.finished)
+
+        # split into batched-eligible vs exact-length fallback
+        batched: List[Request] = []
+        fallback: List[Request] = []
+        for req in batch:
+            ok = (self._prefill_n is not None and not req.extra
+                  and len(req.prompt) <= self.max_len)
+            (batched if ok else fallback).append(req)
+
+        # group eligible requests by padded bucket length, then chunk each
+        # group to the prefill batch limit -> one dispatch per chunk
+        groups = {}
+        for req in batched:
+            groups.setdefault(self._bucket_len(len(req.prompt)),
+                              []).append(req)
+        for blen, reqs in sorted(groups.items()):
+            for i in range(0, len(reqs), self.max_prefill_batch):
+                chunk = reqs[i:i + self.max_prefill_batch]
+                toks = np.full((len(chunk), blen), PAD_ID, np.int32)
+                lens = np.zeros((len(chunk),), np.int32)
+                for j, req in enumerate(chunk):
+                    toks[j, :len(req.prompt)] = req.prompt
+                    lens[j] = len(req.prompt)
+                logits, group_cache = self._prefill_n(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens))
+                self.metrics.on_prefill(len(chunk))
+                slots = [free.pop(0) for _ in chunk]
+                self._admit_group(chunk, slots, logits, group_cache, now)
+
+        for req in fallback:
+            b = {"tokens": jnp.asarray(req.prompt[None])}
+            for k, v in req.extra.items():
+                b[k] = jnp.asarray(v[None])
+            logits, one_cache = self._prefill1(self.params, b)
+            self.metrics.on_prefill(1)
+            self._admit_group([req], [free.pop(0)], logits, one_cache, now)
+
+        return (len(self.finished) > n_done_before
+                and self.scheduler.depth > 0)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
 
@@ -109,8 +269,16 @@ class ServeEngine:
                 toks[i, 0] = req.out_tokens[-1]
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        ls = self.lane_sampling
+        nxt, new_kd = sample_tokens(logits[:, :self.vocab],
+                                    jnp.asarray(ls.temperature),
+                                    jnp.asarray(ls.top_k),
+                                    jnp.asarray(ls.top_p),
+                                    jnp.asarray(ls.key))
+        ls.key[:] = np.asarray(new_kd)
+        nxt = np.asarray(nxt)
         now = time.perf_counter()
+        busy = self.active()          # before the finish-scan frees lanes
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -119,14 +287,41 @@ class ServeEngine:
             if len(req.out_tokens) >= req.max_new or tok == self.eos_id:
                 req.done_t = now
                 self.slots[i] = None                # lane freed immediately
+                ls.clear_lane(i)
                 self.finished.append(req)
+                self.metrics.on_finish(req, now)
         self.steps += 1
+        self.metrics.on_step(self.scheduler.depth, busy, now)
         return self.active()
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
-            self._admit()
-            if self.active() == 0 and not self.queue:
+            # step() admits first, so one call per iteration does both
+            if self.step() == 0 and not self.scheduler.depth:
                 break
-            self.step()
         return self.finished
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        """Waiting requests in current admission order."""
+        return self.scheduler.peek_order()
+
+    def reset_stats(self) -> None:
+        """Drop finished/rejected/expired records and metrics counters —
+        e.g. after a jit warm-up pass — without touching lanes or queue."""
+        self.finished.clear()
+        self.scheduler.rejected.clear()
+        self.scheduler.expired.clear()
+        self.scheduler.rejected_total = 0
+        self.scheduler.expired_total = 0
+        self.steps = 0
+        self.metrics = MetricsCollector(n_slots=self.max_batch)
+
+    def metrics_snapshot(self) -> EngineSnapshot:
+        return self.metrics.snapshot(
+            queue_depth_now=self.scheduler.depth,
+            rejected=self.scheduler.rejected_total,
+            expired=self.scheduler.expired_total)

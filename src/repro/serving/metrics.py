@@ -1,0 +1,143 @@
+"""Serving metrics: per-request latency accounting + engine-level counters.
+
+Definitions (standard serving vocabulary):
+
+* **TTFT** — time to first token: ``first_token_t - submitted_t`` (includes
+  queueing delay, which is the whole point of measuring it per policy).
+* **TPOT** — time per output token after the first:
+  ``(done_t - first_token_t) / (n_tokens - 1)``.
+* **tokens/s** — generated tokens over the engine's active wall-clock.
+* **queue depth / slot utilisation** — step-weighted means sampled once per
+  engine step, i.e. what the engine actually saw while running.
+
+``MetricsCollector`` is pure bookkeeping (no jax); the engine feeds it
+events and asks for a :class:`EngineSnapshot` — a frozen, structured view
+suitable for logging, benches, and assertions in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+    return s[idx]
+
+
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else float("nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    count: int
+    mean: float
+    p50: float
+    p95: float
+    max: float
+
+    @classmethod
+    def of(cls, xs: List[float]) -> "LatencyStats":
+        return cls(count=len(xs), mean=_mean(xs),
+                   p50=_percentile(xs, 0.50), p95=_percentile(xs, 0.95),
+                   max=max(xs) if xs else float("nan"))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSnapshot:
+    """One structured reading of the engine's counters; see module docstring
+    for the latency definitions."""
+    completed: int
+    rejected: int
+    expired: int
+    steps: int
+    generated_tokens: int
+    wall_s: float
+    tokens_per_s: float
+    ttft: LatencyStats
+    tpot: LatencyStats
+    queue_wait: LatencyStats
+    queue_depth_mean: float
+    queue_depth_now: int
+    slot_utilization: float            # mean fraction of busy lanes per step
+    prefill_dispatches: int
+    prefill_requests: int
+    prefill_batch_mean: float          # requests amortised per dispatch
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class MetricsCollector:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.ttft: List[float] = []
+        self.tpot: List[float] = []
+        self.queue_wait: List[float] = []
+        self.completed = 0
+        self.generated_tokens = 0
+        self.steps = 0
+        self._depth_sum = 0
+        self._busy_sum = 0
+        self.prefill_dispatches = 0
+        self.prefill_requests = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def on_prefill(self, n_requests: int) -> None:
+        self.prefill_dispatches += 1
+        self.prefill_requests += n_requests
+
+    def on_admit(self, req, now: float) -> None:
+        self.queue_wait.append(now - req.submitted_t)
+        if self._t_first is None:
+            self._t_first = now
+
+    def on_step(self, queue_depth: int, busy_slots: int, now: float) -> None:
+        self.steps += 1
+        self._depth_sum += queue_depth
+        self._busy_sum += busy_slots
+        self._t_last = now
+
+    def on_finish(self, req, now: float) -> None:
+        self.completed += 1
+        n = len(req.out_tokens)
+        self.generated_tokens += n
+        if req.first_token_t is not None:
+            self.ttft.append(req.first_token_t - req.submitted_t)
+            if n > 1 and req.done_t is not None:
+                self.tpot.append((req.done_t - req.first_token_t) / (n - 1))
+        self._t_last = now
+
+    # ------------------------------------------------------------------
+    def snapshot(self, *, queue_depth_now: int = 0, rejected: int = 0,
+                 expired: int = 0) -> EngineSnapshot:
+        wall = 0.0
+        if self._t_first is not None and self._t_last is not None:
+            wall = max(self._t_last - self._t_first, 0.0)
+        return EngineSnapshot(
+            completed=self.completed,
+            rejected=rejected,
+            expired=expired,
+            steps=self.steps,
+            generated_tokens=self.generated_tokens,
+            wall_s=wall,
+            tokens_per_s=self.generated_tokens / wall if wall > 0 else float("nan"),
+            ttft=LatencyStats.of(self.ttft),
+            tpot=LatencyStats.of(self.tpot),
+            queue_wait=LatencyStats.of(self.queue_wait),
+            queue_depth_mean=self._depth_sum / self.steps if self.steps else 0.0,
+            queue_depth_now=queue_depth_now,
+            slot_utilization=(self._busy_sum / (self.steps * self.n_slots)
+                              if self.steps else 0.0),
+            prefill_dispatches=self.prefill_dispatches,
+            prefill_requests=self.prefill_requests,
+            prefill_batch_mean=(self.prefill_requests / self.prefill_dispatches
+                                if self.prefill_dispatches else 0.0),
+        )

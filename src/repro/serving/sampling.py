@@ -1,0 +1,138 @@
+"""Token sampling for the serving engine.
+
+Per-request :class:`SamplingParams` are flattened into per-lane arrays
+(temperature / top-k / top-p / PRNG key) so one jitted :func:`sample_tokens`
+call serves every active lane of the continuous batch at once — greedy lanes
+and stochastic lanes coexist in the same dispatch.
+
+Semantics (matching the usual serving conventions):
+
+* ``temperature <= 0``  -> greedy argmax; the PRNG is not consumed.
+* ``top_k > 0``         -> restrict to the k highest logits.
+* ``top_p < 1``         -> restrict to the smallest prefix of the
+  probability-sorted vocab whose cumulative mass reaches ``top_p``
+  (the nucleus; the boundary token is always kept).
+* filters compose: top-k first, then top-p over the RENORMALIZED
+  survivor distribution (HF-style).
+
+Each lane owns an independent counter-mode PRNG stream derived from the
+request's ``seed``, so decode order / lane placement / batch composition
+never change a request's sampled tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy.  Defaults reproduce the old greedy engine."""
+    temperature: float = 0.0
+    top_k: int = 0                 # 0 = disabled
+    top_p: float = 1.0             # 1 = disabled
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass
+class LaneSampling:
+    """SoA view of the sampling state of every lane (host side).
+
+    The engine owns one of these sized ``max_batch``; admission writes a
+    request's params into its lane, and every decode step ships the arrays
+    to :func:`sample_tokens` and writes back the advanced PRNG counters.
+    """
+    temperature: np.ndarray        # (B,) float32
+    top_k: np.ndarray              # (B,) int32
+    top_p: np.ndarray              # (B,) float32
+    key: np.ndarray                # (B, 2) uint32 (jax threefry key data)
+
+    @classmethod
+    def empty(cls, n_lanes: int) -> "LaneSampling":
+        # key width depends on the active PRNG impl (threefry: 2 uint32,
+        # rbg: 4) — ask jax rather than hardcoding
+        kd = jax.random.key_data(jax.random.key(0))
+        return cls(
+            temperature=np.zeros((n_lanes,), np.float32),
+            top_k=np.zeros((n_lanes,), np.int32),
+            top_p=np.ones((n_lanes,), np.float32),
+            key=np.zeros((n_lanes,) + kd.shape, kd.dtype),
+        )
+
+    def set_lane(self, lane: int, params: SamplingParams) -> None:
+        self.temperature[lane] = params.temperature
+        self.top_k[lane] = params.top_k
+        self.top_p[lane] = params.top_p
+        self.key[lane] = jax.random.key_data(jax.random.key(params.seed))
+
+    def clear_lane(self, lane: int) -> None:
+        self.set_lane(lane, GREEDY)
+
+
+def _filter_one(logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
+                top_p: jax.Array) -> jax.Array:
+    """Temperature-scale then top-k/top-p mask one lane's logits (V,)."""
+    v = logits.shape[-1]
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    order = jnp.sort(scaled)[::-1]                       # descending
+    # top-k threshold: value of the k-th largest logit (k==0 -> whole vocab)
+    k = jnp.where(top_k > 0, top_k, v)
+    in_topk = jnp.arange(v) < k
+    kth = order[jnp.clip(k - 1, 0, v - 1)]
+    # top-p over the RENORMALIZED top-k survivors: keep entries whose
+    # *preceding* cumulative survivor mass is < top_p (boundary included)
+    probs = jax.nn.softmax(jnp.where(in_topk, order, NEG_INF))
+    prior_mass = jnp.cumsum(probs) - probs
+    in_nucleus = in_topk & (prior_mass < top_p)
+    pth = jnp.min(jnp.where(in_nucleus, order, jnp.inf))
+    cut = jnp.maximum(kth, pth)
+    return jnp.where(scaled < cut, NEG_INF, scaled)
+
+
+def _sample_tokens(logits: jax.Array, temperature: jax.Array,
+                   top_k: jax.Array, top_p: jax.Array, key_data: jax.Array):
+    """Sample one token per lane.
+
+    logits (B, V) float; temperature (B,), top_k (B,), top_p (B,),
+    key_data (B, 2) uint32.  Returns (tokens (B,) int32, new key_data).
+    """
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(l, t, k, p, kd):
+        kk = jax.random.wrap_key_data(kd)
+        kk, sub = jax.random.split(kk)
+        tok = jax.random.categorical(sub, _filter_one(l, t, k, p))
+        return tok.astype(jnp.int32), jax.random.key_data(kk)
+
+    samp_tok, new_kd = jax.vmap(one)(logits, temperature, top_k, top_p,
+                                     key_data)
+    is_greedy = temperature <= 0.0
+    tokens = jnp.where(is_greedy, greedy_tok, samp_tok)
+    # greedy lanes leave their stream untouched (reproducible mid-flight
+    # policy switches, and admission of a fresh request into a reused lane)
+    new_kd = jnp.where(is_greedy[:, None], key_data, new_kd)
+    return tokens, new_kd
+
+
+sample_tokens = jax.jit(_sample_tokens)

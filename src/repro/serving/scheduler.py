@@ -1,0 +1,112 @@
+"""Admission scheduling for the serving engine.
+
+The engine asks the scheduler which queued requests to prefill whenever
+decode lanes free up; the scheduler answers according to a pluggable policy
+and enforces queue limits and per-request deadlines:
+
+* ``fcfs``      — first come, first served (arrival order).
+* ``spf``       — shortest-prompt-first: cheapest prefill next, which
+  minimises mean TTFT under backlog (classic SJF argument).
+* ``priority``  — higher ``Request.priority`` first; FCFS within a class.
+
+``max_queue`` bounds the backlog (``submit`` is rejected beyond it — the
+open-loop overload answer is admission control, not an unbounded queue), and
+a request whose ``deadline_s`` elapses while still queued is dropped at pop
+time rather than wasting prefill compute on an answer nobody is waiting for.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+POLICIES = ("fcfs", "spf", "priority")
+KEEP_DROPPED = 256          # recent rejected/expired kept for introspection
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    policy: str = "fcfs"
+    max_queue: Optional[int] = None      # None = unbounded
+    default_deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; expected one of {POLICIES}")
+
+
+class AdmissionScheduler:
+    """Holds the waiting queue; policy decides pop order, limits decide drops.
+
+    Works on any request object exposing ``rid``, ``prompt`` (sized),
+    ``priority``, ``submitted_t`` and optional ``deadline_s`` — i.e. the
+    engine's Request.
+    """
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._queue: List = []
+        # bounded recency windows (totals are separate counters so a
+        # long-lived overloaded engine doesn't hoard dropped Request objects)
+        self.rejected = collections.deque(maxlen=KEEP_DROPPED)
+        self.expired = collections.deque(maxlen=KEEP_DROPPED)
+        self.rejected_total = 0
+        self.expired_total = 0
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def depth(self) -> int:
+        return len(self._queue)
+
+    def push(self, req, now: float) -> bool:
+        """Queue ``req``; False = rejected because the queue is full."""
+        mq = self.config.max_queue
+        if mq is not None and len(self._queue) >= mq:
+            self.rejected.append(req)
+            self.rejected_total += 1
+            return False
+        if req.deadline_s is None:
+            req.deadline_s = self.config.default_deadline_s
+        self._queue.append(req)
+        return True
+
+    def _drop_expired(self, now: float) -> None:
+        live = []
+        for r in self._queue:
+            if r.deadline_s is not None and now - r.submitted_t > r.deadline_s:
+                self.expired.append(r)
+                self.expired_total += 1
+            else:
+                live.append(r)
+        self._queue = live
+
+    def _rank(self) -> Callable:
+        # stable sort keyed per policy; arrival order breaks every tie
+        if self.config.policy == "spf":
+            return lambda r: (len(r.prompt), r.submitted_t, r.rid)
+        if self.config.policy == "priority":
+            return lambda r: (-r.priority, r.submitted_t, r.rid)
+        return lambda r: (r.submitted_t, r.rid)
+
+    def pop(self, k: int, now: float) -> List:
+        """Take up to ``k`` requests to admit, best-first per policy."""
+        if k <= 0:
+            return []
+        self._drop_expired(now)
+        self._queue.sort(key=self._rank())
+        taken, self._queue = self._queue[:k], self._queue[k:]
+        return taken
+
+    def peek_order(self) -> List:
+        """Current admission order (no side effects) — for introspection."""
+        return sorted(self._queue, key=self._rank())
+
+    def stats(self) -> Dict[str, int]:
+        return {"depth": len(self._queue),
+                "rejected": self.rejected_total,
+                "expired": self.expired_total}

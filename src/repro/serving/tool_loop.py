@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.offload.tools import ToolExecutor
 from repro.serving.engine import ServeEngine
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -59,16 +60,18 @@ class AgentTrace:
                 for s in self.spans]
 
 
-def _generate(engine: ServeEngine, prompt: np.ndarray, n_tokens: int) -> None:
+def _generate(engine: ServeEngine, prompt: np.ndarray, n_tokens: int,
+              sampling: Optional[SamplingParams] = None) -> None:
     """Timed decode work standing in for LRM reasoning/summarisation."""
-    engine.submit(prompt, max_new=n_tokens)
+    engine.submit(prompt, max_new=n_tokens, sampling=sampling)
     engine.run_until_drained()
 
 
 def run_scenario(engine: ServeEngine, executor: ToolExecutor,
                  queries: List[str], *, async_tools: bool,
                  reason_tokens: int = 12, summary_tokens: int = 24,
-                 seed: int = 0) -> AgentTrace:
+                 seed: int = 0,
+                 sampling: Optional[SamplingParams] = None) -> AgentTrace:
     """The paper's A.4 scenario: N begin_search (async) or N [search+wait]
     (sync), then per query: retrieve -> summarize."""
     rng = np.random.default_rng(seed)
@@ -92,22 +95,22 @@ def run_scenario(engine: ServeEngine, executor: ToolExecutor,
         for q in queries:
             executor.begin("vector_db_begin_search", query=q, k=5)
         with span("reason", "initial reasoning / planning"):
-            _generate(engine, prompt(), reason_tokens)
+            _generate(engine, prompt(), reason_tokens, sampling)
         for q in queries:
             with span("tool_wait", f"retrieve({q})"):
                 executor.retrieve()
             with span("summarize", f"summary({q})"):
-                _generate(engine, prompt(), summary_tokens)
+                _generate(engine, prompt(), summary_tokens, sampling)
     else:
         # Fig. 8 baseline: tool on the critical path
         with span("reason", "initial reasoning / planning"):
-            _generate(engine, prompt(), reason_tokens)
+            _generate(engine, prompt(), reason_tokens, sampling)
         for q in queries:
             executor.begin("vector_db_begin_search", query=q, k=5)
             with span("tool_wait", f"search({q}) [blocking]"):
                 executor.retrieve()
             with span("summarize", f"summary({q})"):
-                _generate(engine, prompt(), summary_tokens)
+                _generate(engine, prompt(), summary_tokens, sampling)
 
     trace.t_end = time.perf_counter()
     return trace

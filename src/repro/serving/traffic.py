@@ -1,0 +1,39 @@
+"""Open-loop traffic driving: submit requests at fixed arrival times while
+continuously stepping the engine.
+
+Open loop means arrivals never wait for the server — the standard way to
+measure a serving system at a given offered load (benchmarks) or to demo
+overload behaviour (examples).  Shared here so the bench and the demo
+cannot drift apart on drive semantics.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+from repro.serving.engine import ServeEngine
+
+
+def drive_open_loop(engine: ServeEngine, arrival_times: Sequence[float],
+                    submit: Callable[[int, float], None], *,
+                    max_sleep_s: float = 0.01) -> float:
+    """Run ``engine`` until every arrival is submitted and drained.
+
+    ``arrival_times`` are seconds from start, sorted ascending;
+    ``submit(i, now)`` is called when arrival ``i`` comes due (it decides
+    prompt/params and calls ``engine.submit``).  Between due arrivals the
+    engine decodes; when idle it naps until the next arrival (bounded by
+    ``max_sleep_s`` so admission stays responsive).  Returns wall seconds.
+    """
+    t0 = time.perf_counter()
+    n, nxt = len(arrival_times), 0
+    while nxt < n or engine.active() or engine.scheduler.depth:
+        now = time.perf_counter() - t0
+        while nxt < n and arrival_times[nxt] <= now:
+            submit(nxt, now)
+            nxt += 1
+        if not engine.step() and nxt < n:
+            wait = arrival_times[nxt] - (time.perf_counter() - t0)
+            time.sleep(min(max(wait, 0.0), max_sleep_s))
+    return time.perf_counter() - t0

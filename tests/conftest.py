@@ -1,6 +1,63 @@
 import os
 import sys
+import types
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (multi-device tests run in subprocesses).
+
+# ---------------------------------------------------------------------------
+# hypothesis guard: the property tests are tier-2 polish; when the plugin is
+# missing (bare container, no `pip install -e .[dev]`) collection must still
+# succeed and the @given tests must SKIP with a visible reason instead of
+# erroring the whole module at import time.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without the dev extra
+    import pytest
+
+    _SKIP_REASON = ("hypothesis not installed - property test skipped "
+                    "(run `pip install -e .[dev]`)")
+
+    class _AnyStrategy:
+        """Stands in for any hypothesis strategy expression at collect time."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        __ror__ = __or__
+
+    def _given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(reason=_SKIP_REASON)(fn)
+        return deco
+
+    def _settings(*a, **k):
+        if a and callable(a[0]) and not isinstance(a[0], _AnyStrategy):
+            return a[0]                       # bare @settings
+
+        def deco(fn):
+            return fn
+        return deco
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _settings
+    _stub.assume = lambda *a, **k: True
+    _stub.note = lambda *a, **k: None
+    _stub.example = _given
+    _stub.HealthCheck = _AnyStrategy()
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _AnyStrategy()
+
+    _stub.strategies = _st
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,85 @@
+"""Admission scheduler: policy ordering, queue limits, deadlines."""
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
+
+
+def _req(rid, plen=8, priority=0, submitted=None, deadline=None):
+    return Request(rid, np.zeros(plen, np.int32), priority=priority,
+                   submitted_t=float(rid if submitted is None else submitted),
+                   deadline_s=deadline)
+
+
+def _pop_rids(sched, k=100, now=1000.0):
+    return [r.rid for r in sched.pop(k, now)]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        SchedulerConfig(policy="lifo")
+
+
+def test_fcfs_orders_by_arrival():
+    s = AdmissionScheduler(SchedulerConfig(policy="fcfs"))
+    for rid, plen in [(0, 9), (1, 3), (2, 7)]:
+        s.push(_req(rid, plen), now=float(rid))
+    assert _pop_rids(s) == [0, 1, 2]
+
+
+def test_spf_orders_by_prompt_length():
+    s = AdmissionScheduler(SchedulerConfig(policy="spf"))
+    for rid, plen in [(0, 9), (1, 3), (2, 7), (3, 3)]:
+        s.push(_req(rid, plen), now=float(rid))
+    # shortest first; arrival order breaks the 3-vs-3 tie
+    assert _pop_rids(s) == [1, 3, 2, 0]
+
+
+def test_priority_orders_by_class_then_arrival():
+    s = AdmissionScheduler(SchedulerConfig(policy="priority"))
+    for rid, pr in [(0, 0), (1, 5), (2, 5), (3, 1)]:
+        s.push(_req(rid, priority=pr), now=float(rid))
+    assert _pop_rids(s) == [1, 2, 3, 0]
+
+
+def test_pop_takes_at_most_k_and_leaves_rest():
+    s = AdmissionScheduler(SchedulerConfig(policy="fcfs"))
+    for rid in range(5):
+        s.push(_req(rid), now=float(rid))
+    assert _pop_rids(s, k=2) == [0, 1]
+    assert s.depth == 3
+    assert _pop_rids(s, k=0) == []
+    assert _pop_rids(s) == [2, 3, 4]
+
+
+def test_max_queue_rejects_at_submit():
+    s = AdmissionScheduler(SchedulerConfig(max_queue=2))
+    assert s.push(_req(0), 0.0) and s.push(_req(1), 0.0)
+    assert not s.push(_req(2), 0.0)
+    assert s.depth == 2 and [r.rid for r in s.rejected] == [2]
+    assert s.stats() == {"depth": 2, "rejected": 1, "expired": 0}
+
+
+def test_deadline_drops_expired_at_pop():
+    s = AdmissionScheduler(SchedulerConfig())
+    s.push(_req(0, submitted=0.0, deadline=5.0), now=0.0)
+    s.push(_req(1, submitted=0.0, deadline=50.0), now=0.0)
+    s.push(_req(2, submitted=0.0), now=0.0)            # no deadline
+    assert _pop_rids(s, now=10.0) == [1, 2]
+    assert [r.rid for r in s.expired] == [0]
+
+
+def test_default_deadline_applied_from_config():
+    s = AdmissionScheduler(SchedulerConfig(default_deadline_s=5.0))
+    s.push(_req(0, submitted=0.0), now=0.0)
+    assert _pop_rids(s, now=10.0) == []
+    assert [r.rid for r in s.expired] == [0]
+
+
+def test_peek_order_has_no_side_effects():
+    s = AdmissionScheduler(SchedulerConfig(policy="spf"))
+    for rid, plen in [(0, 9), (1, 3)]:
+        s.push(_req(rid, plen), now=float(rid))
+    assert [r.rid for r in s.peek_order()] == [1, 0]
+    assert s.depth == 2

@@ -1,4 +1,6 @@
 """Continuous batching correctness + tool-loop timeline."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,8 @@ from repro.models.api import build_model
 from repro.offload.tools import ToolExecutor
 from repro.offload.vectordb import VectorDB
 from repro.serving.engine import ServeEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import SchedulerConfig
 from repro.serving.tool_loop import run_scenario
 
 RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
@@ -24,13 +28,15 @@ def small_lm():
 
 
 def _naive_greedy(model, params, prompt, n, max_len=48):
+    v = model.cfg.vocab_size        # logits are pad_vocab-wide; the engine
+    #                                 (correctly) never emits pad-column ids
     l, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len))(
         params, {"tokens": jnp.asarray(prompt[None])})
-    toks = [int(jnp.argmax(l[0]))]
+    toks = [int(jnp.argmax(l[0, :v]))]
     step = jax.jit(model.decode_step)
     for _ in range(n - 1):
         l, cache = step(params, cache, jnp.asarray([[toks[-1]]], jnp.int32))
-        toks.append(int(jnp.argmax(l[0])))
+        toks.append(int(jnp.argmax(l[0, :v])))
     return toks
 
 
@@ -46,6 +52,159 @@ def test_continuous_batching_matches_naive(small_lm):
     assert len(done) == 4
     for r, p in zip(done, prompts):
         assert r.out_tokens == _naive_greedy(model, params, p, 4)
+
+
+def test_prefill_ragged_gate_excludes_unsafe_families():
+    """Right-padded batched prefill must only be offered where padding is
+    provably inert: dense full-attention.  MoE pad tokens perturb expert
+    routing/capacity; recurrent families fold pads into their state."""
+    assert build_model(reduced_config(get_config("granite-8b")),
+                       RCFG).prefill_ragged is not None
+    for arch in ("grok-1-314b", "llama4-scout-17b-a16e", "rwkv6-1.6b",
+                 "zamba2-7b", "whisper-small", "internvl2-1b"):
+        assert build_model(reduced_config(get_config(arch)),
+                           RCFG).prefill_ragged is None, arch
+
+
+def test_bucketed_prefill_matches_per_request(small_lm):
+    """Batched padded prefill must be token-for-token identical to the
+    seed's one-dispatch-per-request path, in strictly fewer dispatches."""
+    model, params = small_lm
+    assert model.prefill_ragged is not None
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, model.cfg.vocab_size, size=4 + (3 * i) % 11)
+               for i in range(16)]
+
+    def run(m):
+        eng = ServeEngine(m, params, max_batch=16, max_len=48)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        done = eng.run_until_drained()
+        return {r.rid: r.out_tokens for r in done}, eng.metrics_snapshot()
+
+    toks_bucketed, snap_b = run(model)
+    toks_fallback, snap_f = run(dataclasses.replace(model, prefill_ragged=None))
+    assert toks_bucketed == toks_fallback
+    assert snap_f.prefill_dispatches == 16
+    assert snap_b.prefill_dispatches < 16
+    assert snap_b.prefill_requests == 16
+    assert snap_b.prefill_batch_mean > 1.0
+
+
+def test_engine_sampling_deterministic_and_distinct(small_lm):
+    model, params = small_lm
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, model.cfg.vocab_size, size=6) for _ in range(3)]
+    # high temperature: the tiny random-weight model is extremely confident,
+    # so mild temperatures would still reproduce greedy argmax everywhere
+    sp = SamplingParams(temperature=8.0, top_k=64, seed=123)
+
+    def run(seed_offset=0):
+        eng = ServeEngine(model, params, max_batch=2, max_len=48)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=5, sampling=dataclasses.replace(
+                sp, seed=sp.seed + seed_offset * (i + 1)))
+        return {r.rid: r.out_tokens for r in eng.run_until_drained()}
+
+    assert run() == run()                       # fixed seeds -> identical
+    greedy = ServeEngine(model, params, max_batch=2, max_len=48)
+    for p in prompts:
+        greedy.submit(p, max_new=5)
+    greedy_toks = {r.rid: r.out_tokens for r in greedy.run_until_drained()}
+    assert run() != greedy_toks                 # and actually stochastic
+
+
+def test_engine_policy_orders_admission(small_lm):
+    model, params = small_lm
+    rng = np.random.default_rng(3)
+    mk = lambda n: rng.integers(0, model.cfg.vocab_size, size=n)
+
+    eng = ServeEngine(model, params, max_batch=1, max_len=48,
+                      scheduler=SchedulerConfig(policy="priority"))
+    rid_lo = eng.submit(mk(5), max_new=2, priority=0)
+    rid_hi = eng.submit(mk(5), max_new=2, priority=9)
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [rid_hi, rid_lo]
+
+    eng = ServeEngine(model, params, max_batch=1, max_len=48,
+                      scheduler=SchedulerConfig(policy="spf"))
+    rid_long = eng.submit(mk(12), max_new=2)
+    rid_short = eng.submit(mk(4), max_new=2)
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [rid_short, rid_long]
+
+
+def test_engine_queue_limit_and_metrics_snapshot(small_lm):
+    model, params = small_lm
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, model.cfg.vocab_size, size=5) for _ in range(4)]
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                      scheduler=SchedulerConfig(max_queue=3))
+    rids = [eng.submit(p, max_new=3) for p in prompts]
+    assert rids[3] is None and all(r is not None for r in rids[:3])
+    done = eng.run_until_drained()
+    snap = eng.metrics_snapshot()
+    assert snap.completed == 3
+    assert snap.rejected == 1 and snap.expired == 0
+    assert snap.generated_tokens == sum(len(r.out_tokens) for r in done) == 9
+    assert snap.queue_depth_now == 0
+    assert snap.steps == eng.steps > 0
+    assert 0.0 < snap.slot_utilization <= 1.0
+    assert snap.ttft.count == 3 and snap.ttft.mean > 0.0
+    assert snap.tpot.count == 3 and snap.tpot.mean > 0.0
+    assert snap.tokens_per_s > 0.0
+    assert snap.wall_s > 0.0
+    d = snap.as_dict()
+    assert d["completed"] == 3 and d["ttft"]["count"] == 3
+
+
+def test_engine_max_new_one_and_eos_on_first_token(small_lm):
+    """max_new=1 must emit exactly one token; a first token equal to eos_id
+    must finish the request at admission without a decode step."""
+    model, params = small_lm
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, model.cfg.vocab_size, size=7)
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=48)
+    eng.submit(prompt, max_new=1)
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].out_tokens) == 1
+    first_tok = done[0].out_tokens[0]
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                      eos_id=first_tok)
+    eng.submit(prompt, max_new=10)
+    done = eng.run_until_drained()
+    assert done[0].out_tokens == [first_tok]
+    assert eng.steps == 0                       # never reached decode
+
+    # an instant finish must refill its lane in the SAME admission round
+    eng = ServeEngine(model, params, max_batch=1, max_len=48)
+    eng.submit(prompt, max_new=1)
+    eng.submit(prompt, max_new=3)
+    eng._admit()
+    assert len(eng.finished) == 1 and eng.active() == 1
+
+
+def test_engine_rejects_buckets_beyond_max_len(small_lm):
+    model, params = small_lm
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    prefill_buckets=(16, 64))
+
+
+def test_engine_deadline_expires_queued_request(small_lm):
+    model, params = small_lm
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(model, params, max_batch=1, max_len=48)
+    ok = eng.submit(rng.integers(0, model.cfg.vocab_size, size=5), max_new=2)
+    dead = eng.submit(rng.integers(0, model.cfg.vocab_size, size=5),
+                      max_new=2, deadline_s=-1.0)   # already expired
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [ok]
+    assert [r.rid for r in eng.scheduler.expired] == [dead]
+    assert eng.metrics_snapshot().expired == 1
 
 
 def test_tool_loop_async_removes_idle(small_lm):
