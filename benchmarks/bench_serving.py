@@ -1,25 +1,38 @@
 """Serving engine under load: throughput/latency across admission policies.
 
-Two measurements:
+Measurements:
 
 1. **Backlog admission** — a cold 16-request backlog, bucketed batched
    prefill vs the seed's one-dispatch-per-request behaviour.  The batched
    path must admit the same work in strictly fewer prefill dispatches.
-2. **Open-loop load sweep** — Poisson arrivals at several offered loads,
-   driven step-by-step (arrivals are submitted when their time comes due,
-   the engine never waits for the queue to fill).  Reports TTFT / TPOT /
-   tokens-per-second / mean queue depth per scheduler policy.
+2. **Paged vs dense KV at equal memory** — a mixed-length (16-512 token)
+   backlog served twice with the SAME total KV budget: dense lanes
+   (max_batch x max_len) vs the block-pooled paged layout.  Paged must
+   sustain >= 1.5x the mean concurrent lanes, because short requests no
+   longer hold a worst-case-length lane.  Also drives a deliberately tiny
+   pool to force preemption and checks the preempted greedy requests
+   resume token-identically.
+3. **Open-loop load sweep** (skipped with ``--smoke``) — Poisson arrivals
+   at several offered loads per scheduler policy; TTFT / TPOT / tokens/s /
+   queue depth.
+
+``--smoke`` shrinks everything to a CI-runnable size and is the
+configuration the ``bench-smoke`` CI job runs (its JSON lands in
+``experiments/bench/serving.json`` and is uploaded as an artifact); any
+assertion failure or engine crash fails the job.
 """
+import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import OUT_DIR, emit
 from repro.configs import RunConfig, get_config, reduced_config
 from repro.models.api import build_model
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import EngineConfig, ServeEngine
 from repro.serving.scheduler import POLICIES, SchedulerConfig
 from repro.serving.traffic import drive_open_loop
 
@@ -37,6 +50,14 @@ def _prompts(cfg, n, seed=0):
     rng = np.random.default_rng(seed)
     return [rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 24)))
             for _ in range(n)]
+
+
+def _mixed_prompts(cfg, n, lo=16, hi=512, seed=0):
+    """Log-uniform lengths in [lo, hi]: mostly short, a heavy tail — the
+    distribution where dense per-lane allocation wastes the most."""
+    rng = np.random.default_rng(seed)
+    lens = np.exp(rng.uniform(np.log(lo), np.log(hi), size=n)).astype(int)
+    return [rng.integers(0, cfg.vocab_size, size=int(n_)) for n_ in lens]
 
 
 def bench_backlog(cfg, model, params, n_requests=16):
@@ -59,6 +80,86 @@ def bench_backlog(cfg, model, params, n_requests=16):
     assert int(rows[0][2].split("=")[1]) < int(rows[1][2].split("=")[1]), \
         "bucketed prefill must use fewer dispatches than per-request"
     return rows
+
+
+def bench_paged_vs_dense(cfg, model, params, *, smoke: bool):
+    """Equal-KV-memory shootout on mixed-length traffic.
+
+    Dense budget = max_batch * max_len cache positions per layer; the paged
+    engine gets exactly that many positions as a block pool but 4x the
+    lanes, so admission is bound by live tokens instead of lane count.
+    """
+    dense_lanes = 4 if smoke else 8
+    max_new = 4 if smoke else 8
+    max_len = 544                              # 512-token prompts + headroom
+    n_req = 16 if smoke else 48
+    block = 16
+    budget = dense_lanes * max_len             # KV positions per layer
+    prompts = _mixed_prompts(cfg, n_req, seed=1)
+
+    def drain(eng):
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        t0 = time.perf_counter()
+        eng.run_until_drained(max_steps=100_000)
+        dt = time.perf_counter() - t0
+        snap = eng.metrics_snapshot()
+        assert snap.completed == n_req, \
+            f"engine dropped work: {snap.completed}/{n_req}"
+        return dt, snap
+
+    dt_d, snap_d = drain(ServeEngine(model, params, max_batch=dense_lanes,
+                                     max_len=max_len))
+    dt_p, snap_p = drain(ServeEngine(
+        model, params, max_batch=4 * dense_lanes, max_len=max_len,
+        config=EngineConfig(kv_blocks=budget // block, kv_block_size=block)))
+
+    ratio = snap_p.busy_lanes_mean / snap_d.busy_lanes_mean
+    rows = [
+        ["paged_dense_lanes", round(dt_d * 1e6, 0),
+         f"busy_lanes_mean={snap_d.busy_lanes_mean:.2f}",
+         f"kv_positions={budget}", f"steps={snap_d.steps}",
+         f"completed={snap_d.completed}"],
+        ["paged_block_pool", round(dt_p * 1e6, 0),
+         f"busy_lanes_mean={snap_p.busy_lanes_mean:.2f}",
+         f"kv_positions={budget // block * block}", f"steps={snap_p.steps}",
+         f"completed={snap_p.completed}",
+         f"preemptions={snap_p.preemptions}",
+         f"block_util={snap_p.kv_block_utilization:.2f}"],
+        ["paged_concurrency_ratio", round(ratio, 2)],
+    ]
+    assert ratio >= 1.5, (
+        f"paged layout must sustain >= 1.5x concurrent lanes at equal KV "
+        f"memory, got {ratio:.2f}x")
+
+    # preemption drill: a pool too small for every lane to grow must evict,
+    # requeue and resume with token-identical greedy output
+    small = _prompts(cfg, 6, seed=2)
+    ref = ServeEngine(model, params, max_batch=4, max_len=64)
+    for p in small:
+        ref.submit(p, max_new=8)
+    want = {r.rid: r.out_tokens for r in ref.run_until_drained()}
+    tight = ServeEngine(model, params, max_batch=4, max_len=64,
+                        config=EngineConfig(kv_blocks=12, kv_block_size=4))
+    for p in small:
+        tight.submit(p, max_new=8)
+    got = {r.rid: r.out_tokens for r in tight.run_until_drained()}
+    snap_t = tight.metrics_snapshot()
+    assert snap_t.preemptions > 0, "tiny pool should have forced preemption"
+    assert got == want, "preempted requests must resume token-identically"
+    rows.append(["paged_preempt_resume", snap_t.preemptions,
+                 f"resumes={snap_t.resumes}", "token_identical=True"])
+    summary = {
+        "busy_lanes_mean_dense": snap_d.busy_lanes_mean,
+        "busy_lanes_mean_paged": snap_p.busy_lanes_mean,
+        "concurrency_ratio": ratio,
+        "kv_positions_budget": budget,
+        "paged_preemptions": snap_p.preemptions,
+        "drill_preemptions": snap_t.preemptions,
+        "drill_resumes": snap_t.resumes,
+        "preempt_resume_token_identical": got == want,
+    }
+    return rows, summary
 
 
 def bench_load_sweep(cfg, model, params, *, loads=(4.0, 16.0),
@@ -95,12 +196,29 @@ def bench_load_sweep(cfg, model, params, *, loads=(4.0, 16.0),
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized config; skips the load sweep")
+    args = ap.parse_args(argv)
     cfg, model, params = _build()
-    rows = [r + [""] * (8 - len(r)) for r in bench_backlog(cfg, model, params)]
-    rows += bench_load_sweep(cfg, model, params)
+    rows = list(bench_backlog(cfg, model, params))
+    paged_rows, paged_summary = bench_paged_vs_dense(cfg, model, params,
+                                                     smoke=args.smoke)
+    rows += paged_rows
+    if not args.smoke:
+        rows += bench_load_sweep(cfg, model, params)
+    width = max(len(r) for r in rows)
+    rows = [r + [""] * (width - len(r)) for r in rows]
     emit("serving", rows,
-         ["name", "us_total", "d1", "d2", "d3", "d4", "d5", "d6"])
+         ["name", "us_total"] + [f"d{i}" for i in range(1, width - 1)])
+    out = OUT_DIR / "serving.json"
+    out.write_text(json.dumps({
+        "smoke": args.smoke,
+        "rows": [[str(x) for x in r] for r in rows],
+        "paged_vs_dense": paged_summary,
+    }, indent=2) + "\n")
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

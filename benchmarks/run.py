@@ -21,7 +21,9 @@ ALL = {
     "wire": bench_wire.main,                # paper Fig. 2 protocol
     "kernels": bench_kernels.main,          # Pallas kernel budgets
     "roofline": roofline_report.main,       # §Roofline table from dry-run
-    "serving": bench_serving.main,          # engine under load (ROADMAP)
+    # engine under load (ROADMAP); explicit empty argv — its CLI would
+    # otherwise swallow the orchestrator's own bench-name arguments
+    "serving": lambda: bench_serving.main([]),
 }
 
 

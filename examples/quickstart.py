@@ -59,8 +59,13 @@ def main():
                                log_every=25),
                  step_fn, init_state, data_iter)
     out = tr.run()
-    print(f"[quickstart] loss {out['losses'][0]:.3f} -> "
-          f"{out['losses'][-1]:.3f} (bigram entropy floor ~{np.log(8):.3f})")
+    if out["losses"]:
+        print(f"[quickstart] loss {out['losses'][0]:.3f} -> "
+              f"{out['losses'][-1]:.3f} (bigram entropy floor ~{np.log(8):.3f})")
+    else:
+        # a finished checkpoint in ckpt_dir resumes AT total_steps: no new
+        # train steps, no losses — still serve below
+        print("[quickstart] restored fully-trained checkpoint (no new steps)")
 
     # serve the trained model
     eng = ServeEngine(model, out["params"], max_batch=4, max_len=160)

@@ -21,6 +21,7 @@ from repro.kernels import ref as kref
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.mamba2_ssd import mamba2_ssd_fwd
+from repro.kernels.paged_attention import paged_decode_attention_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
 from repro.kernels.rwkv6_scan import rwkv6_chunked_fwd
 
@@ -63,6 +64,12 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 def decode_attention(q, ck, cv, valid, scale: float):
     return decode_attention_fwd(q, ck, cv, valid, scale=scale,
                                 interpret=_interpret())
+
+
+def paged_decode_attention(q, kp, vp, block_tables, pos, scale: float):
+    """Flash-decode over a block-pooled KV cache (serving only, no grad)."""
+    return paged_decode_attention_fwd(q, kp, vp, block_tables, pos,
+                                      scale=scale, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,15 @@ last-real-token logits and a cache with per-lane ``pos``.  It is only set
 when padding is provably inert (full causal attention, no recurrent state);
 callers must fall back to per-request ``prefill`` when it is ``None``.
 
+Optional paged-KV hooks (block-pooled serving — repro.serving.engine):
+``init_paged_cache(n_lanes, n_blocks, block_size)`` builds a block-pool
+cache sized by live tokens rather than lanes × max_len, and
+``decode_step_paged(params, cache, tokens, block_tables)`` advances it one
+token per lane through per-lane block tables.  Only families whose decode
+state is a pure attention K/V cache get these hooks; ssm / rwkv / hybrid /
+enc-dec (recurrent or cross-attention state is not pageable by position)
+stay ``None`` and the engine falls back to dense lanes.
+
 Families: decoder-only (dense/moe/ssm/hybrid/vlm) -> repro.models.lm;
 enc-dec (audio/whisper) -> repro.models.encdec.
 """
@@ -43,6 +52,10 @@ class Model:
     prefill_ragged: Optional[
         Callable[[dict, Dict[str, jax.Array], jax.Array, int],
                  Tuple[jax.Array, dict]]] = None
+    init_paged_cache: Optional[Callable[[int, int, int], dict]] = None
+    decode_step_paged: Optional[
+        Callable[[dict, dict, jax.Array, jax.Array],
+                 Tuple[jax.Array, dict]]] = None
 
 
 def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
@@ -65,6 +78,13 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
     ragged_ok = (cfg.family == "dense" and not cfg.rwkv
                  and cfg.attention == "full" and not cfg.frontend
                  and not cfg.n_enc_layers)
+    # paged KV is exact wherever the per-layer decode state is a pure
+    # attention K/V cache addressed by position: dense and moe (routing is
+    # per-token at decode, so paging cannot perturb it).  Recurrent state
+    # (ssm/rwkv/hybrid) and enc-dec cross caches are not position-pageable;
+    # chunked_local's ring-buffer addressing is dense-span specific.
+    paged_ok = (cfg.family in ("dense", "moe") and not cfg.rwkv
+                and cfg.attention == "full" and not cfg.n_enc_layers)
     return Model(
         cfg=cfg, rcfg=rcfg,
         init=lambda key: LM.init_lm(cfg, key, pdt),
@@ -76,4 +96,10 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
         prefill_ragged=(
             (lambda p, b, ln, ml: LM.lm_prefill_ragged(cfg, p, b, ln, rcfg, ml))
             if ragged_ok else None),
+        init_paged_cache=(
+            (lambda nl, nb, bs: LM.init_paged_cache(cfg, nl, nb, bs, cdt))
+            if paged_ok else None),
+        decode_step_paged=(
+            (lambda p, c, t, bt: LM.lm_decode_step_paged(cfg, p, c, t, bt, rcfg))
+            if paged_ok else None),
     )

@@ -189,6 +189,55 @@ def decode_attn(params: dict, cfg: ModelConfig, x: jax.Array,
     return out.reshape(b, 1, cfg.q_dim) @ params["wo"], ck, cv
 
 
+def decode_attn_paged(params: dict, cfg: ModelConfig, x: jax.Array,
+                      kp: jax.Array, vp: jax.Array, block_tables: jax.Array,
+                      pos: jax.Array, *, use_rope: bool = True,
+                      use_kernels: bool = False):
+    """One-token decode for one layer against a PAGED KV pool.
+
+    x: (B,1,D); kp/vp: (nb, bs, KVH, Dh) — the shared block pool for this
+    layer (block 0 is the garbage sink); block_tables: (B, max_blocks)
+    int32 physical block ids per lane; pos: (B,) int32 tokens seen.
+    Returns (out (B,1,D), new kp, new vp).
+
+    Token ``pos`` of a lane lives at physical slot
+    ``block_tables[lane, pos // bs] * bs + pos % bs`` of the flattened
+    pool; lanes own disjoint blocks so the scatter below cannot collide
+    (idle lanes all point at the sink, whose content is never read).
+    """
+    b = x.shape[0]
+    nb, bs = kp.shape[0], kp.shape[1]
+    span_l = block_tables.shape[1] * bs           # per-lane logical capacity
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _proj_qkv(params, x, x, cfg)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    p_eff = jnp.minimum(pos, span_l - 1)          # saturate like the dense path
+    lane = jnp.arange(b)
+    dest = block_tables[lane, p_eff // bs] * bs + p_eff % bs      # (B,) flat
+    kp = kp.reshape((nb * bs,) + kp.shape[2:]).at[dest].set(
+        k[:, 0].astype(kp.dtype)).reshape(kp.shape)
+    vp = vp.reshape((nb * bs,) + vp.shape[2:]).at[dest].set(
+        v[:, 0].astype(vp.dtype)).reshape(vp.shape)
+    scale = cfg.head_dim ** -0.5
+    if use_kernels:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(q, kp.astype(q.dtype),
+                                          vp.astype(q.dtype), block_tables,
+                                          p_eff, scale=scale)
+    else:
+        # gather reference: materialise each lane's logical KV view
+        ck = kp[block_tables].reshape(b, span_l, cfg.n_kv_heads, cfg.head_dim)
+        cv = vp[block_tables].reshape(b, span_l, cfg.n_kv_heads, cfg.head_dim)
+        valid = jnp.arange(span_l)[None, :] <= p_eff[:, None]     # (B, span_l)
+        nrep = cfg.n_heads // cfg.n_kv_heads
+        kk = _repeat_kv(ck.astype(q.dtype), nrep)
+        vv = _repeat_kv(cv.astype(q.dtype), nrep)
+        out = sdpa(q, kk, vv, valid[:, None, None, :], scale)
+    return out.reshape(b, 1, cfg.q_dim) @ params["wo"], kp, vp
+
+
 def prefill_attn(params: dict, cfg: ModelConfig, x: jax.Array,
                  positions: jax.Array, span: int, *,
                  use_rope: bool = True,

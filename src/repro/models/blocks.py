@@ -200,6 +200,24 @@ def block_decode(cfg: ModelConfig, bp: dict, x: jax.Array, cache: dict,
     return x, {"k": ck, "v": cv}
 
 
+def block_decode_paged(cfg: ModelConfig, bp: dict, x: jax.Array,
+                       kp: jax.Array, vp: jax.Array, block_tables: jax.Array,
+                       pos: jax.Array, idx, uk: bool):
+    """One-token decode against a paged KV pool (attention-cache families
+    only — the assembly gates ssm/rwkv/hybrid to the dense path)."""
+    h, kp, vp = attn.decode_attn_paged(bp["attn"], cfg, rmsnorm(bp["ln1"], x),
+                                       kp, vp, block_tables, pos,
+                                       use_kernels=uk)
+    x = x + h
+    h = rmsnorm(bp["ln2"], x)
+    if cfg.n_experts:
+        y, _ = moe_mod.apply_moe(bp["moe"], cfg, h, group_size=max(1, x.shape[0]))
+        x = x + y
+    else:
+        x = x + apply_mlp(bp["mlp"], h, cfg.act)
+    return x, kp, vp
+
+
 # ---------------------------------------------------------------------------
 # zamba2 shared attention block — fired by the assembly every ``attn_every``
 # ---------------------------------------------------------------------------

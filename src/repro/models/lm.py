@@ -268,6 +268,39 @@ def lm_decode_step(cfg: ModelConfig, params: dict, cache: dict,
     return logits, new_cache
 
 
+def lm_decode_step_paged(cfg: ModelConfig, params: dict, cache: dict,
+                         tokens: jax.Array, block_tables: jax.Array,
+                         rcfg: RunConfig) -> Tuple[jax.Array, dict]:
+    """One decode step against a PAGED KV pool.
+
+    cache: {"layers": {"k"/"v": (L, nb, bs, KVH, Dh)}, "pos": (B,)};
+    block_tables: (B, max_blocks) int32 physical block ids (0 = sink).
+    tokens: (B, 1) int32.  Returns (logits (B, Vp), cache).
+
+    Only wired for pure-attention-cache families (build_model gates
+    ssm / rwkv / hybrid / enc-dec to the dense lanes path).
+    """
+    cdt = _dt(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+    x = embed_tokens(params["embed"], tokens, cdt)
+    pos = cache["pos"]
+
+    def body(carry, inp):
+        bp, kl, vl = inp
+        x = carry
+        x, kl, vl = B.block_decode_paged(cfg, bp, x, kl, vl, block_tables,
+                                         pos, None, uk)
+        return x, {"k": kl, "v": vl}
+
+    x, new_layers = maybe_scan(
+        body, x,
+        (params["blocks"], cache["layers"]["k"], cache["layers"]["v"]),
+        cfg.n_layers, rcfg.unroll_layers)
+    x = rmsnorm(params["final_ln"], x)
+    logits = x[:, -1] @ head_weight(cfg, params, cdt)
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
 # ---------------------------------------------------------------------------
 # cache + input specs
 # ---------------------------------------------------------------------------
@@ -286,6 +319,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
                                 dtype)
         cache["av"] = jnp.zeros_like(cache["ak"])
     return cache
+
+
+def init_paged_cache(cfg: ModelConfig, n_lanes: int, n_blocks: int,
+                     block_size: int, dtype) -> dict:
+    """Pooled KV cache: ``n_blocks`` usable blocks + 1 sink (block id 0).
+
+    Unlike :func:`init_cache` the pool is sized by LIVE TOKENS
+    (``n_blocks * block_size`` positions per layer), not by
+    lanes × worst-case length; per-lane block tables (engine-owned) map
+    logical positions to pool slots.
+    """
+    shape = (cfg.n_layers, n_blocks + 1, block_size, cfg.n_kv_heads, cfg.head_dim)
+    layers = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"layers": layers, "pos": jnp.zeros((n_lanes,), jnp.int32)}
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,

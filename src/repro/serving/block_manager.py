@@ -1,0 +1,95 @@
+"""Paged KV-cache block accounting for the serving engine.
+
+The KV pool is a fixed set of fixed-size blocks (``block_size`` token
+positions each, all layers ride together in the model-side pool arrays);
+a lane's cache is the ordered list of blocks in its block table, so
+admission capacity is bound by *live tokens*, not by lanes times the
+worst-case sequence length.
+
+Block id 0 is RESERVED as the sink: free decode lanes and right-pad
+positions scatter their garbage writes there, so the manager hands out
+ids ``1..n_blocks`` only.
+
+Watermark: ``can_admit`` keeps ``watermark_blocks`` free blocks in
+reserve for decode-time growth of already-running lanes — admitting up
+to the last block converts every subsequent grow into a preemption.
+Growth allocation (``allocate_one``) ignores the watermark; running
+requests always get priority over queued ones.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class BlockManager:
+    """Free-list allocator over ``n_blocks`` usable KV blocks."""
+
+    def __init__(self, n_blocks: int, block_size: int, watermark_frac: float = 0.0):
+        if n_blocks < 1:
+            raise ValueError(f"need at least one usable block, got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if not 0.0 <= watermark_frac < 1.0:
+            raise ValueError(f"watermark_frac must be in [0, 1), got {watermark_frac}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.watermark_blocks = int(watermark_frac * n_blocks)
+        # LIFO free list: recently-freed blocks are re-used first
+        self._free: List[int] = list(range(n_blocks, 0, -1))
+        self._allocated: set = set()
+        self.peak_in_use = 0
+        self.alloc_count = 0
+        self.free_count = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.in_use / self.n_blocks
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        """Blocks covering ``n_tokens`` cache positions (at least one)."""
+        return max(1, -(-n_tokens // self.block_size))
+
+    def can_admit(self, n: int) -> bool:
+        """Whether ``n`` blocks may go to a NEW request (watermark applies)."""
+        return len(self._free) - n >= self.watermark_blocks
+
+    # ------------------------------------------------------------------
+    def allocate(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks (no watermark), or None without side effects."""
+        if n > len(self._free):
+            return None
+        taken = [self._free.pop() for _ in range(n)]
+        self._allocated.update(taken)
+        self.alloc_count += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return taken
+
+    def allocate_one(self) -> Optional[int]:
+        got = self.allocate(1)
+        return got[0] if got else None
+
+    def release(self, blocks: List[int]) -> None:
+        """Return blocks to the free list.  A double free is rejected at
+        the offending call, BEFORE the free list is touched — a duplicate
+        id on the list would later hand one physical block to two lanes,
+        silently aliasing their KV writes."""
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate block ids in release: {blocks}")
+        for b in blocks:
+            if not 1 <= b <= self.n_blocks:
+                raise ValueError(f"block id {b} outside the usable range")
+            if b not in self._allocated:
+                raise ValueError(f"double free: block {b} is not allocated")
+        self._allocated.difference_update(blocks)
+        self._free.extend(reversed(blocks))
+        self.free_count += len(blocks)

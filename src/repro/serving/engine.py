@@ -6,6 +6,21 @@ active lane one token per step, finished lanes free immediately (continuous
 batching).  Works for every decoder-only family and whisper (enc-dec)
 through the Model protocol.
 
+KV memory comes in two layouts:
+
+* **dense** (default) — one ``max_len``-wide cache lane per slot; admission
+  capacity is ``max_batch`` regardless of how short requests actually are.
+* **paged** (``EngineConfig.kv_blocks``) — a shared pool of fixed-size KV
+  blocks (:mod:`repro.serving.block_manager`); lanes hold per-request block
+  tables, admission allocates just the blocks a prompt needs, decode grows
+  tables one block at a time, and when the pool is exhausted the engine
+  PREEMPTS the most recently admitted lane (LIFO / recompute policy): its
+  blocks are released and the request is requeued carrying its generated
+  tokens and sampler state, so on re-admission it prefills prompt+generated
+  in one shot and resumes token-identically.  Families whose decode state
+  is not a position-addressed K/V cache (ssm / rwkv / hybrid / enc-dec)
+  have no ``decode_step_paged`` hook and silently fall back to dense lanes.
+
 Prefill is **bucketed and batched**: prompts are right-padded to a small set
 of length buckets and several admissions share ONE jitted
 ``model.prefill_ragged`` dispatch (exact for full-causal-attention configs —
@@ -17,27 +32,49 @@ model inputs, fall back to the per-request exact-length prefill.
 Decoding is per-request :class:`~repro.serving.sampling.SamplingParams`
 (greedy / temperature / top-k / top-p, seeded per-lane PRNG streams), and a
 :class:`~repro.serving.metrics.MetricsCollector` keeps TTFT / TPOT /
-throughput / utilisation accounting; ``metrics_snapshot()`` returns the
-structured reading.
+throughput / utilisation / preemption / block accounting;
+``metrics_snapshot()`` returns the structured reading.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serving.block_manager import BlockManager
 from repro.serving.metrics import EngineSnapshot, MetricsCollector
 from repro.serving.sampling import (GREEDY, LaneSampling, SamplingParams,
                                     sample_tokens)
 from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
 
-PAD_ID = 0
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-wide knobs (model- and policy-independent).
+
+    ``pad_id`` fills the right-pad region of bucketed prefill batches.  The
+    padded positions are causally masked out of every real token, so any id
+    inside the vocab is CORRECT — but it must be configurable so that
+    vocabularies where 0 is a live token can pick an unambiguous filler for
+    logging/debugging, instead of a hardcoded module constant.
+
+    ``kv_blocks`` switches the KV cache to the paged layout: a pool of that
+    many usable ``kv_block_size``-token blocks shared by all lanes (plus an
+    internal sink block).  ``watermark_frac`` of the pool is held back from
+    admission as headroom for decode-time growth — 0 admits greedily and
+    relies purely on preemption; a small reserve (e.g. 0.05) trades a
+    little admission capacity for fewer preemptions under pressure.
+    """
+    pad_id: int = 0
+    kv_blocks: Optional[int] = None
+    kv_block_size: int = 16
+    watermark_frac: float = 0.0
 
 
 @dataclasses.dataclass
@@ -54,6 +91,10 @@ class Request:
     priority: int = 0
     deadline_s: Optional[float] = None
     admitted_t: Optional[float] = None
+    preemptions: int = 0
+    # PRNG counter frozen at preemption so a stochastic request resumes on
+    # exactly the sample stream it would have continued on
+    saved_key: Optional[np.ndarray] = None
 
 
 def default_buckets(max_len: int, smallest: int = 16) -> Tuple[int, ...]:
@@ -71,12 +112,14 @@ class ServeEngine:
                  eos_id: Optional[int] = None,
                  scheduler: Optional[SchedulerConfig] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 max_prefill_batch: int = 8):
+                 max_prefill_batch: int = 8,
+                 config: Optional[EngineConfig] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.config = config or EngineConfig()
         # logit width is pad_vocab(vocab); the pad columns carry real random
         # head weights, so sampling must be restricted to the true vocab
         self.vocab = int(model.cfg.vocab_size)
@@ -90,12 +133,35 @@ class ServeEngine:
                 f"real prompt K/V")
         self.max_prefill_batch = max(1, min(max_prefill_batch, max_batch))
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.cache = model.init_cache(max_batch, max_len)
         self.lane_sampling = LaneSampling.empty(max_batch)
         self._rid = 0
         self.steps = 0
         self.finished: List[Request] = []
-        self.metrics = MetricsCollector(n_slots=max_batch)
+
+        # KV layout: paged pool when configured AND the family supports it
+        self.paged = (self.config.kv_blocks is not None
+                      and model.decode_step_paged is not None)
+        if self.paged:
+            bs = self.config.kv_block_size
+            self.blocks: Optional[BlockManager] = BlockManager(
+                self.config.kv_blocks, bs, self.config.watermark_frac)
+            self.max_blocks_per_lane = -(-max_len // bs)
+            self.cache = model.init_paged_cache(max_batch,
+                                                self.config.kv_blocks, bs)
+            self.block_tables = np.zeros(
+                (max_batch, self.max_blocks_per_lane), np.int32)
+            self._lane_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+            self._lane_pos = np.zeros((max_batch,), np.int64)
+            self._reserved: Dict[int, List[int]] = {}     # rid -> admit blocks
+            self._decode_paged = jax.jit(model.decode_step_paged,
+                                         donate_argnums=1)
+        else:
+            self.blocks = None
+            self.cache = model.init_cache(max_batch, max_len)
+
+        self.metrics = MetricsCollector(
+            n_slots=max_batch,
+            n_blocks=self.blocks.n_blocks if self.paged else 0)
 
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self._prefill1 = jax.jit(
@@ -107,36 +173,61 @@ class ServeEngine:
         else:
             self._prefill_n = None
 
-        # Locate each cache leaf's lane axis ONCE by diffing the shapes of
-        # two abstract caches that differ only in batch (-1 = no lane axis,
-        # e.g. scalars shared across lanes).
-        s_a = jax.eval_shape(lambda: model.init_cache(max_batch, max_len))
-        s_b = jax.eval_shape(lambda: model.init_cache(max_batch + 1, max_len))
+        if self.paged:
+            def paste_paged(cache, src_layers, src_lane, flat_idx, dst_slot,
+                            length):
+                """Scatter lane ``src_lane`` of a prefill cache into this
+                lane's allocated pool blocks.  ``flat_idx`` (width,) maps
+                prefill positions to flattened pool slots; positions past
+                the real context point at the sink block."""
+                def fix(pool, src):
+                    nl = pool.shape[0]
+                    flat = pool.reshape((nl, -1) + pool.shape[3:])
+                    piece = jax.lax.dynamic_index_in_dim(
+                        src, src_lane, axis=1, keepdims=False)
+                    piece = jax.lax.slice_in_dim(
+                        piece, 0, flat_idx.shape[0], axis=1)
+                    flat = flat.at[:, flat_idx].set(piece.astype(flat.dtype))
+                    return flat.reshape(pool.shape)
+                layers = {"k": fix(cache["layers"]["k"], src_layers["k"]),
+                          "v": fix(cache["layers"]["v"], src_layers["v"])}
+                pos = cache["pos"].at[dst_slot].set(length)
+                return {"layers": layers, "pos": pos}
 
-        def lane_axis(a, b):
-            for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
-                if da != db:
-                    return ax
-            return -1
+            self._paste_paged = jax.jit(paste_paged, donate_argnums=0)
+        else:
+            # Locate each cache leaf's lane axis ONCE by diffing the shapes
+            # of two abstract caches that differ only in batch (-1 = no lane
+            # axis, e.g. scalars shared across lanes).
+            s_a = jax.eval_shape(lambda: model.init_cache(max_batch, max_len))
+            s_b = jax.eval_shape(
+                lambda: model.init_cache(max_batch + 1, max_len))
 
-        self._lane_ax = jax.tree.map(lane_axis, s_a, s_b)
+            def lane_axis(a, b):
+                for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
+                    if da != db:
+                        return ax
+                return -1
 
-        def paste(cache, src_cache, src_lane, dst_slot):
-            """Copy lane ``src_lane`` of a prefill cache into decode lane
-            ``dst_slot``.  Lane indices are traced, so every admission
-            reuses one compile per source-batch shape."""
-            def fix(ax, dst, src):
-                if ax < 0:
-                    return dst
-                piece = jax.lax.dynamic_index_in_dim(src, src_lane, axis=ax,
-                                                     keepdims=True)
-                idx = tuple(dst_slot if i == ax else 0
-                            for i in range(dst.ndim))
-                return jax.lax.dynamic_update_slice(
-                    dst, piece.astype(dst.dtype), idx)
-            return jax.tree.map(fix, self._lane_ax, cache, src_cache)
+            self._lane_ax = jax.tree.map(lane_axis, s_a, s_b)
 
-        self._paste = jax.jit(paste, donate_argnums=0)
+            def paste(cache, src_cache, src_lane, dst_slot):
+                """Copy lane ``src_lane`` of a prefill cache into decode lane
+                ``dst_slot``.  Lane indices are traced, so every admission
+                reuses one compile per source-batch shape."""
+                def fix(ax, dst, src):
+                    if ax < 0:
+                        return dst
+                    piece = jax.lax.dynamic_index_in_dim(src, src_lane,
+                                                         axis=ax,
+                                                         keepdims=True)
+                    idx = tuple(dst_slot if i == ax else 0
+                                for i in range(dst.ndim))
+                    return jax.lax.dynamic_update_slice(
+                        dst, piece.astype(dst.dtype), idx)
+                return jax.tree.map(fix, self._lane_ax, cache, src_cache)
+
+            self._paste = jax.jit(paste, donate_argnums=0)
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -156,6 +247,22 @@ class ServeEngine:
             return None
         return rid
 
+    def _prefill_tokens(self, req: Request) -> np.ndarray:
+        """Tokens to prefill: the prompt, plus — after a preemption — every
+        token generated so far, so the request resumes where it left off."""
+        if not req.out_tokens:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.out_tokens, np.int32)])
+
+    def _ctx_len(self, req: Request) -> int:
+        """Cache positions the prefill will occupy (frontend rows included)."""
+        n = len(req.prompt) + len(req.out_tokens)
+        fe = req.extra.get("frontend")
+        if fe is not None:
+            n += fe.shape[0]
+        return n
+
     def _bucket_len(self, n: int) -> int:
         for b in self.buckets:
             if b >= n:
@@ -164,12 +271,60 @@ class ServeEngine:
         # fresh prefill executable per distinct prompt length
         return self.max_len
 
+    def _flat_idx(self, blocks: List[int], n_ctx: int,
+                  width: int) -> np.ndarray:
+        """Flattened pool slots for prefill positions 0..width-1: real
+        context goes to the lane's blocks, pad tail to the sink (block 0)."""
+        bs = self.blocks.block_size
+        i = np.arange(width)
+        phys = (i % bs).astype(np.int64)               # sink for the tail
+        real = i < n_ctx
+        ids = np.asarray(blocks, np.int64)
+        phys[real] = ids[i[real] // bs] * bs + i[real] % bs
+        return phys
+
+    def _reserve_blocks(self, batch: List[Request]) -> List[Request]:
+        """Allocate each admission's prompt blocks up front; spill whatever
+        doesn't fit back to the queue (allocate-on-admit)."""
+        admitted: List[Request] = []
+        # blocks a request may need at any (re-)admission; watermark
+        # included, else a request could pass feasibility yet never pass
+        # can_admit — livelocking itself and everything queued behind it
+        usable = self.blocks.n_blocks - self.blocks.watermark_blocks
+        for i, req in enumerate(batch):
+            n_ctx = self._ctx_len(req)
+            # feasibility is judged on the FINAL footprint: the context
+            # plus every token the request may still generate (>= n_ctx).
+            # A request admitted on prompt size alone but over-budget at
+            # completion would generate half its tokens and then die in a
+            # preempt/reject loop; one past max_len could resume with more
+            # context than the prefill cache span holds.  Unlike the dense
+            # layout (which lossily CLAMPS writes past max_len), paged
+            # mode rejects such requests up front.
+            final = n_ctx - len(req.out_tokens) + req.max_new - 1
+            if final > self.max_len or self.blocks.blocks_needed(final) > usable:
+                self.scheduler.reject(req)
+                continue
+            need = self.blocks.blocks_needed(n_ctx)
+            if not self.blocks.can_admit(need):
+                for r in batch[i:]:
+                    self.scheduler.requeue(r)
+                break
+            self._reserved[req.rid] = self.blocks.allocate(need)
+            admitted.append(req)
+        return admitted
+
     def _admit_group(self, reqs: List[Request], slots: List[int],
-                     logits: jax.Array, group_cache, now: float) -> None:
-        """Sample all first tokens in ONE dispatch, then paste each lane."""
+                     logits: jax.Array, group_cache, now: float,
+                     widths: List[int]) -> None:
+        """Sample all first tokens in ONE dispatch, then paste each lane.
+        ``widths[j]`` is the prefill width request j was padded to (its
+        bucket length, or its exact context length on the fallback path)."""
         ls = self.lane_sampling
         for req, slot in zip(reqs, slots):
             ls.set_lane(slot, req.sampling)
+            if req.saved_key is not None:     # resume: continue the stream
+                ls.key[slot] = req.saved_key
         idx = np.asarray(slots)
         toks, new_kd = sample_tokens(logits[:, :self.vocab],
                                      jnp.asarray(ls.temperature[idx]),
@@ -180,20 +335,38 @@ class ServeEngine:
         t_first = time.perf_counter()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             ls.key[slot] = new_kd[j]
+            n_ctx = self._ctx_len(req)
             tok = int(toks[j])
             req.out_tokens.append(tok)
-            req.first_token_t = t_first
+            if req.admitted_t is None:
+                req.first_token_t = t_first
+                self.metrics.on_admit(req, now)
+            else:
+                self.metrics.on_resume(req, now)
             req.admitted_t = now
-            self.metrics.on_admit(req, now)
-            if req.max_new <= 1 or tok == self.eos_id:
+            req.saved_key = None
+            if len(req.out_tokens) >= req.max_new or tok == self.eos_id:
                 # finished at admission: never occupies a decode lane
                 req.done_t = t_first
                 ls.clear_lane(slot)
+                if self.paged:
+                    self.blocks.release(self._reserved.pop(req.rid))
                 self.finished.append(req)
                 self.metrics.on_finish(req, t_first)
                 continue
-            self.cache = self._paste(self.cache, group_cache,
-                                     jnp.int32(j), jnp.int32(slot))
+            if self.paged:
+                blocks = self._reserved.pop(req.rid)
+                flat = self._flat_idx(blocks, n_ctx, widths[j])
+                self.cache = self._paste_paged(
+                    self.cache, group_cache["layers"], jnp.int32(j),
+                    jnp.asarray(flat), jnp.int32(slot), jnp.int32(n_ctx))
+                self._lane_blocks[slot] = blocks
+                self.block_tables[slot, :] = 0
+                self.block_tables[slot, :len(blocks)] = blocks
+                self._lane_pos[slot] = n_ctx
+            else:
+                self.cache = self._paste(self.cache, group_cache,
+                                         jnp.int32(j), jnp.int32(slot))
             self.slots[slot] = req
 
     def _admit(self) -> None:
@@ -209,6 +382,8 @@ class ServeEngine:
             return False
         now = time.perf_counter()
         batch = self.scheduler.pop(len(free), now)
+        if self.paged and batch:
+            batch = self._reserve_blocks(batch)
         if not batch:
             return False
         n_done_before = len(self.finished)
@@ -218,39 +393,93 @@ class ServeEngine:
         fallback: List[Request] = []
         for req in batch:
             ok = (self._prefill_n is not None and not req.extra
-                  and len(req.prompt) <= self.max_len)
+                  and self._ctx_len(req) <= self.max_len)
             (batched if ok else fallback).append(req)
 
         # group eligible requests by padded bucket length, then chunk each
         # group to the prefill batch limit -> one dispatch per chunk
         groups = {}
         for req in batched:
-            groups.setdefault(self._bucket_len(len(req.prompt)),
+            groups.setdefault(self._bucket_len(self._ctx_len(req)),
                               []).append(req)
         for blen, reqs in sorted(groups.items()):
             for i in range(0, len(reqs), self.max_prefill_batch):
                 chunk = reqs[i:i + self.max_prefill_batch]
-                toks = np.full((len(chunk), blen), PAD_ID, np.int32)
+                toks = np.full((len(chunk), blen), self.config.pad_id,
+                               np.int32)
                 lens = np.zeros((len(chunk),), np.int32)
                 for j, req in enumerate(chunk):
-                    toks[j, :len(req.prompt)] = req.prompt
-                    lens[j] = len(req.prompt)
+                    seq = self._prefill_tokens(req)
+                    toks[j, :len(seq)] = seq
+                    lens[j] = len(seq)
                 logits, group_cache = self._prefill_n(
                     self.params, jnp.asarray(toks), jnp.asarray(lens))
                 self.metrics.on_prefill(len(chunk))
                 slots = [free.pop(0) for _ in chunk]
-                self._admit_group(chunk, slots, logits, group_cache, now)
-
+                self._admit_group(chunk, slots, logits, group_cache, now,
+                                  widths=[blen] * len(chunk))
         for req in fallback:
-            b = {"tokens": jnp.asarray(req.prompt[None])}
+            seq = self._prefill_tokens(req)
+            b = {"tokens": jnp.asarray(seq[None])}
             for k, v in req.extra.items():
                 b[k] = jnp.asarray(v[None])
             logits, one_cache = self._prefill1(self.params, b)
             self.metrics.on_prefill(1)
-            self._admit_group([req], [free.pop(0)], logits, one_cache, now)
+            self._admit_group([req], [free.pop(0)], logits, one_cache, now,
+                              widths=[self._ctx_len(req)])
 
         return (len(self.finished) > n_done_before
                 and self.scheduler.depth > 0)
+
+    # ------------------------------------------------------------------
+    # paged growth / preemption
+    # ------------------------------------------------------------------
+    def _pick_victim(self) -> int:
+        """LIFO (recompute) policy: preempt the most recently admitted lane
+        — it has the least decode work to throw away and re-prefill, and
+        old requests can't be starved by a stream of newer ones."""
+        cands = [i for i, r in enumerate(self.slots) if r is not None]
+        return max(cands,
+                   key=lambda i: (self.slots[i].admitted_t,
+                                  self.slots[i].rid))
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slots[slot]
+        req.preemptions += 1
+        req.saved_key = self.lane_sampling.key[slot].copy()
+        self.blocks.release(self._lane_blocks[slot])
+        self._lane_blocks[slot] = []
+        self.block_tables[slot, :] = 0
+        self._lane_pos[slot] = 0
+        self.slots[slot] = None
+        self.lane_sampling.clear_lane(slot)
+        self.scheduler.requeue(req)
+        self.metrics.on_preempt(req)
+
+    def _grow_lanes(self) -> None:
+        """Grow-on-decode: before a step, every active lane whose next write
+        position crosses into an unallocated block gets one; exhaustion
+        preempts victims (possibly the needy lane itself) until it frees."""
+        bs = self.blocks.block_size
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None:
+                continue
+            bidx = int(self._lane_pos[slot]) // bs
+            if bidx >= self.max_blocks_per_lane:
+                continue                  # saturated: dense-path clamp
+            if bidx < len(self._lane_blocks[slot]):
+                continue
+            blk = self.blocks.allocate_one()
+            while blk is None:
+                victim = self._pick_victim()
+                self._preempt(victim)
+                if victim == slot:
+                    break
+                blk = self.blocks.allocate_one()
+            if self.slots[slot] is None:  # lane preempted itself
+                continue
+            self._lane_blocks[slot].append(blk)
+            self.block_tables[slot, bidx] = blk
 
     # ------------------------------------------------------------------
     # decode
@@ -260,15 +489,29 @@ class ServeEngine:
 
     def step(self) -> int:
         """Admit + one decode step for all active lanes. Returns #active."""
+        if self.paged:
+            # grow RUNNING lanes before admission takes the last free
+            # blocks — else a fresh admission pays a whole prefill only to
+            # be the LIFO victim of an older lane's growth this same step
+            self._grow_lanes()
         self._admit()
+        if self.paged:
+            # second pass covers lanes admitted above whose context ends
+            # exactly on a block boundary (first write needs a new block)
+            self._grow_lanes()
         if self.active() == 0:
             return 0
         toks = np.zeros((self.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None and req.out_tokens:
                 toks[i, 0] = req.out_tokens[-1]
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
+        if self.paged:
+            logits, self.cache = self._decode_paged(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.block_tables))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
         ls = self.lane_sampling
         nxt, new_kd = sample_tokens(logits[:, :self.vocab],
                                     jnp.asarray(ls.temperature),
@@ -282,16 +525,25 @@ class ServeEngine:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            if self.paged:
+                self._lane_pos[i] += 1
             tok = int(nxt[i])
             req.out_tokens.append(tok)
             if len(req.out_tokens) >= req.max_new or tok == self.eos_id:
                 req.done_t = now
                 self.slots[i] = None                # lane freed immediately
                 ls.clear_lane(i)
+                if self.paged:
+                    self.blocks.release(self._lane_blocks[i])
+                    self._lane_blocks[i] = []
+                    self.block_tables[i, :] = 0
+                    self._lane_pos[i] = 0
                 self.finished.append(req)
                 self.metrics.on_finish(req, now)
         self.steps += 1
-        self.metrics.on_step(self.scheduler.depth, busy, now)
+        self.metrics.on_step(self.scheduler.depth, busy, now,
+                             blocks_in_use=(self.blocks.in_use
+                                            if self.paged else 0))
         return self.active()
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
@@ -318,10 +570,15 @@ class ServeEngine:
         self.scheduler.rejected_total = 0
         self.scheduler.expired_total = 0
         self.steps = 0
-        self.metrics = MetricsCollector(n_slots=self.max_batch)
+        self.metrics = MetricsCollector(
+            n_slots=self.max_batch,
+            n_blocks=self.blocks.n_blocks if self.paged else 0)
+        if self.paged:
+            self.blocks.peak_in_use = self.blocks.in_use
 
     def metrics_snapshot(self) -> EngineSnapshot:
         return self.metrics.snapshot(
             queue_depth_now=self.scheduler.depth,
             rejected=self.scheduler.rejected_total,
-            expired=self.scheduler.expired_total)
+            expired=self.scheduler.expired_total,
+            kv_blocks_peak=self.blocks.peak_in_use if self.paged else 0)

@@ -65,17 +65,25 @@ class EngineSnapshot:
     queue_depth_mean: float
     queue_depth_now: int
     slot_utilization: float            # mean fraction of busy lanes per step
+    busy_lanes_mean: float             # sustained concurrency (lanes/step)
     prefill_dispatches: int
     prefill_requests: int
     prefill_batch_mean: float          # requests amortised per dispatch
+    # paged-KV accounting (all zero on a dense-layout engine)
+    preemptions: int                   # lanes evicted on block exhaustion
+    resumes: int                       # preempted requests re-admitted
+    kv_blocks_total: int
+    kv_blocks_peak: int                # high-watermark blocks in use
+    kv_block_utilization: float        # step-weighted mean in_use fraction
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
 
 class MetricsCollector:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, n_blocks: int = 0):
         self.n_slots = n_slots
+        self.n_blocks = n_blocks
         self.ttft: List[float] = []
         self.tpot: List[float] = []
         self.queue_wait: List[float] = []
@@ -84,6 +92,9 @@ class MetricsCollector:
         self.steps = 0
         self._depth_sum = 0
         self._busy_sum = 0
+        self._blocks_sum = 0
+        self.preemptions = 0
+        self.resumes = 0
         self.prefill_dispatches = 0
         self.prefill_requests = 0
         self._t_first: Optional[float] = None
@@ -99,10 +110,20 @@ class MetricsCollector:
         if self._t_first is None:
             self._t_first = now
 
-    def on_step(self, queue_depth: int, busy_slots: int, now: float) -> None:
+    def on_preempt(self, req) -> None:
+        self.preemptions += 1
+
+    def on_resume(self, req, now: float) -> None:
+        self.resumes += 1
+        if self._t_first is None:
+            self._t_first = now
+
+    def on_step(self, queue_depth: int, busy_slots: int, now: float,
+                blocks_in_use: int = 0) -> None:
         self.steps += 1
         self._depth_sum += queue_depth
         self._busy_sum += busy_slots
+        self._blocks_sum += blocks_in_use
         self._t_last = now
 
     def on_finish(self, req, now: float) -> None:
@@ -117,7 +138,7 @@ class MetricsCollector:
 
     # ------------------------------------------------------------------
     def snapshot(self, *, queue_depth_now: int = 0, rejected: int = 0,
-                 expired: int = 0) -> EngineSnapshot:
+                 expired: int = 0, kv_blocks_peak: int = 0) -> EngineSnapshot:
         wall = 0.0
         if self._t_first is not None and self._t_last is not None:
             wall = max(self._t_last - self._t_first, 0.0)
@@ -136,8 +157,16 @@ class MetricsCollector:
             queue_depth_now=queue_depth_now,
             slot_utilization=(self._busy_sum / (self.steps * self.n_slots)
                               if self.steps else 0.0),
+            busy_lanes_mean=self._busy_sum / self.steps if self.steps else 0.0,
             prefill_dispatches=self.prefill_dispatches,
             prefill_requests=self.prefill_requests,
             prefill_batch_mean=(self.prefill_requests / self.prefill_dispatches
                                 if self.prefill_dispatches else 0.0),
+            preemptions=self.preemptions,
+            resumes=self.resumes,
+            kv_blocks_total=self.n_blocks,
+            kv_blocks_peak=kv_blocks_peak,
+            kv_block_utilization=(
+                self._blocks_sum / (self.steps * self.n_blocks)
+                if self.steps and self.n_blocks else 0.0),
         )

@@ -67,18 +67,35 @@ class AdmissionScheduler:
         """Queue ``req``; False = rejected because the queue is full."""
         mq = self.config.max_queue
         if mq is not None and len(self._queue) >= mq:
-            self.rejected.append(req)
-            self.rejected_total += 1
+            self.reject(req)
             return False
         if req.deadline_s is None:
             req.deadline_s = self.config.default_deadline_s
         self._queue.append(req)
         return True
 
+    def requeue(self, req) -> None:
+        """Return a previously popped request to the queue, bypassing
+        ``max_queue`` — used for engine-side spills (KV blocks exhausted at
+        admission) and preemptions, which must never be dropped.  The
+        request keeps its original ``submitted_t``, so FCFS ranks it ahead
+        of everything that arrived after it."""
+        self._queue.append(req)
+
+    def reject(self, req) -> None:
+        """Record a request the engine can never run (admission control)."""
+        self.rejected.append(req)
+        self.rejected_total += 1
+
     def _drop_expired(self, now: float) -> None:
         live = []
         for r in self._queue:
-            if r.deadline_s is not None and now - r.submitted_t > r.deadline_s:
+            # deadlines bound QUEUE wait before first admission; a request
+            # requeued mid-flight (preemption — admitted_t set) already has
+            # tokens a client is owed and must never expire here
+            started = getattr(r, "admitted_t", None) is not None
+            if (not started and r.deadline_s is not None
+                    and now - r.submitted_t > r.deadline_s):
                 self.expired.append(r)
                 self.expired_total += 1
             else:
