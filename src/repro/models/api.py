@@ -7,20 +7,32 @@
     logits, cache = model.decode_step(params, cache, tokens)
     specs = model.input_specs(shape)
 
-Optional serving hook: ``prefill_ragged(params, batch, lengths, max_len)``
-prefills a batch of right-padded prompts in ONE call, returning per-lane
-last-real-token logits and a cache with per-lane ``pos``.  It is only set
-when padding is provably inert (full causal attention, no recurrent state);
-callers must fall back to per-request ``prefill`` when it is ``None``.
+Decode-state capabilities live in ONE structured descriptor,
+``model.decode_state`` (a :class:`DecodeState`), consumed exclusively by
+the serving cache backends (:mod:`repro.serving.backends`).  The engine
+never inspects it — it talks to a ``CacheBackend`` built from it — and
+eligibility (which family may use which state layout) is decided HERE,
+once, instead of being re-derived per call site.
 
-Optional paged-KV hooks (block-pooled serving — repro.serving.engine):
-``init_paged_cache(n_lanes, n_blocks, block_size)`` builds a block-pool
-cache sized by live tokens rather than lanes × max_len, and
-``decode_step_paged(params, cache, tokens, block_tables)`` advances it one
-token per lane through per-lane block tables.  Only families whose decode
-state is a pure attention K/V cache get these hooks; ssm / rwkv / hybrid /
-enc-dec (recurrent or cross-attention state is not pageable by position)
-stay ``None`` and the engine falls back to dense lanes.
+MIGRATION (old optional hooks -> backend methods)
+-------------------------------------------------
+Earlier revisions grew one ``Optional[Callable]`` per capability on
+``Model``; each is now a ``DecodeState`` field feeding a backend method:
+
+* ``model.prefill_ragged(...)``     -> ``decode_state.batched_prefill``;
+  callers go through the engine's bucketed prefill, which pastes into the
+  active backend via ``CacheBackend.prefill_paste``.
+* ``model.init_paged_cache(...)``   -> ``decode_state.pool_init``; only
+  ``PagedBackend`` calls it (``CacheBackend.alloc`` is the public verb).
+* ``model.decode_step_paged(...)``  -> ``decode_state.pool_step``; only
+  ``PagedBackend`` calls it (``CacheBackend.step`` is the public verb).
+
+Code that previously probed ``model.<hook> is not None`` should either
+ask ``model.decode_state`` (capability checks) or, better, build a
+backend with :func:`repro.serving.backends.make_backend` and use the
+protocol.  ``DecodeState.kind`` routes recurrent-state families
+(ssm / rwkv / hybrid) to the pooled constant-footprint
+``RecurrentBackend`` instead of exiling them to dense lanes.
 
 Families: decoder-only (dense/moe/ssm/hybrid/vlm) -> repro.models.lm;
 enc-dec (audio/whisper) -> repro.models.encdec.
@@ -40,6 +52,45 @@ from repro.models import lm as LM
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodeState:
+    """How this model's decode state may be laid out and advanced.
+
+    ``kind`` is the state taxonomy the backend factory dispatches on:
+
+    * ``"attention"`` — per-layer state is (or includes only) a
+      position-addressed K/V cache; dense lanes always work, and the
+      pooled (paged) layout works when ``pool_step`` is wired.
+    * ``"recurrent"`` — ssm / rwkv / hybrid: constant-size per-lane state
+      (conv tail, ssm state, rwkv matrix state, plus the hybrid shared
+      attention span).  Not position-pageable, but cheap to snapshot and
+      restore, which the ``RecurrentBackend`` exploits for
+      constant-footprint preemption.
+    * ``"encdec"`` — cross-attention caches keyed to an encoder pass;
+      dense lanes only.
+
+    The callables are INTERNAL plumbing for the serving backends; nothing
+    else should invoke them (see the module docstring's migration note).
+    ``batched_prefill(params, batch, lengths, max_len)`` is only set when
+    right-padding is provably inert; ``pool_init(n_lanes, n_blocks,
+    block_size)`` / ``pool_step(params, cache, tokens, block_tables)``
+    only where a block pool is exact.
+    """
+
+    kind: str
+    batched_prefill: Optional[
+        Callable[[dict, Dict[str, jax.Array], jax.Array, int],
+                 Tuple[jax.Array, dict]]] = None
+    pool_init: Optional[Callable[[int, int, int], dict]] = None
+    pool_step: Optional[
+        Callable[[dict, dict, jax.Array, jax.Array],
+                 Tuple[jax.Array, dict]]] = None
+
+    @property
+    def poolable(self) -> bool:
+        return self.pool_step is not None
+
+
+@dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ModelConfig
     rcfg: RunConfig
@@ -49,13 +100,7 @@ class Model:
     decode_step: Callable[[dict, dict, jax.Array], Tuple[jax.Array, dict]]
     init_cache: Callable[[int, int], dict]
     input_specs: Callable[[ShapeConfig], Dict[str, Any]]
-    prefill_ragged: Optional[
-        Callable[[dict, Dict[str, jax.Array], jax.Array, int],
-                 Tuple[jax.Array, dict]]] = None
-    init_paged_cache: Optional[Callable[[int, int, int], dict]] = None
-    decode_step_paged: Optional[
-        Callable[[dict, dict, jax.Array, jax.Array],
-                 Tuple[jax.Array, dict]]] = None
+    decode_state: DecodeState = DecodeState(kind="attention")
 
 
 def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
@@ -70,6 +115,7 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
             decode_step=lambda p, c, t: ED.encdec_decode_step(cfg, p, c, t, rcfg),
             init_cache=lambda bsz, ml: ED.init_encdec_cache(cfg, bsz, ml, cdt),
             input_specs=lambda s: ED.encdec_input_specs(cfg, s, rcfg),
+            decode_state=DecodeState(kind="encdec"),
         )
     # right-padded batched prefill is exact only when pad tokens cannot leak
     # into real lanes: full causal attention, no recurrent state, no frontend.
@@ -78,13 +124,14 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
     ragged_ok = (cfg.family == "dense" and not cfg.rwkv
                  and cfg.attention == "full" and not cfg.frontend
                  and not cfg.n_enc_layers)
-    # paged KV is exact wherever the per-layer decode state is a pure
+    # a block pool is exact wherever the per-layer decode state is a pure
     # attention K/V cache addressed by position: dense and moe (routing is
     # per-token at decode, so paging cannot perturb it).  Recurrent state
     # (ssm/rwkv/hybrid) and enc-dec cross caches are not position-pageable;
     # chunked_local's ring-buffer addressing is dense-span specific.
-    paged_ok = (cfg.family in ("dense", "moe") and not cfg.rwkv
-                and cfg.attention == "full" and not cfg.n_enc_layers)
+    pool_ok = (cfg.family in ("dense", "moe") and not cfg.rwkv
+               and cfg.attention == "full" and not cfg.n_enc_layers)
+    recurrent = cfg.rwkv or cfg.family in ("ssm", "hybrid")
     return Model(
         cfg=cfg, rcfg=rcfg,
         init=lambda key: LM.init_lm(cfg, key, pdt),
@@ -93,13 +140,16 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
         decode_step=lambda p, c, t: LM.lm_decode_step(cfg, p, c, t, rcfg),
         init_cache=lambda bsz, ml: LM.init_cache(cfg, bsz, ml, cdt),
         input_specs=lambda s: LM.input_specs(cfg, s, rcfg),
-        prefill_ragged=(
-            (lambda p, b, ln, ml: LM.lm_prefill_ragged(cfg, p, b, ln, rcfg, ml))
-            if ragged_ok else None),
-        init_paged_cache=(
-            (lambda nl, nb, bs: LM.init_paged_cache(cfg, nl, nb, bs, cdt))
-            if paged_ok else None),
-        decode_step_paged=(
-            (lambda p, c, t, bt: LM.lm_decode_step_paged(cfg, p, c, t, bt, rcfg))
-            if paged_ok else None),
+        decode_state=DecodeState(
+            kind="recurrent" if recurrent else "attention",
+            batched_prefill=(
+                (lambda p, b, ln, ml: LM.lm_prefill_padded(cfg, p, b, ln, rcfg, ml))
+                if ragged_ok else None),
+            pool_init=(
+                (lambda nl, nb, bs: LM.init_pool_cache(cfg, nl, nb, bs, cdt))
+                if pool_ok else None),
+            pool_step=(
+                (lambda p, c, t, bt: LM.lm_decode_step_pool(cfg, p, c, t, bt, rcfg))
+                if pool_ok else None),
+        ),
     )

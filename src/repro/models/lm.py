@@ -202,7 +202,7 @@ def lm_prefill(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array],
     return logits, cache
 
 
-def lm_prefill_ragged(cfg: ModelConfig, params: dict,
+def lm_prefill_padded(cfg: ModelConfig, params: dict,
                       batch: Dict[str, jax.Array], lengths: jax.Array,
                       rcfg: RunConfig, max_len: int) -> Tuple[jax.Array, dict]:
     """Batched prefill of right-padded prompts with true ``lengths`` (B,).
@@ -212,8 +212,8 @@ def lm_prefill_ragged(cfg: ModelConfig, params: dict,
     are gathered at each lane's last real position, and the per-lane cache
     ``pos`` masks the pad garbage out of decode until the very step that
     overwrites it.  Recurrent families (ssm / rwkv / hybrid) fold pad tokens
-    into their state, so the engine must not route them here — build_model
-    only wires this hook for eligible configs.
+    into their state, so serving must not route them here — build_model
+    only wires ``DecodeState.batched_prefill`` for eligible configs.
     """
     cdt = _dt(rcfg.compute_dtype)
     x, layer_caches, attn = _prefill_trunk(cfg, params, batch, rcfg, max_len)
@@ -268,17 +268,17 @@ def lm_decode_step(cfg: ModelConfig, params: dict, cache: dict,
     return logits, new_cache
 
 
-def lm_decode_step_paged(cfg: ModelConfig, params: dict, cache: dict,
-                         tokens: jax.Array, block_tables: jax.Array,
-                         rcfg: RunConfig) -> Tuple[jax.Array, dict]:
-    """One decode step against a PAGED KV pool.
+def lm_decode_step_pool(cfg: ModelConfig, params: dict, cache: dict,
+                        tokens: jax.Array, block_tables: jax.Array,
+                        rcfg: RunConfig) -> Tuple[jax.Array, dict]:
+    """One decode step against a block-pooled (paged) KV cache.
 
     cache: {"layers": {"k"/"v": (L, nb, bs, KVH, Dh)}, "pos": (B,)};
     block_tables: (B, max_blocks) int32 physical block ids (0 = sink).
     tokens: (B, 1) int32.  Returns (logits (B, Vp), cache).
 
     Only wired for pure-attention-cache families (build_model gates
-    ssm / rwkv / hybrid / enc-dec to the dense lanes path).
+    ssm / rwkv / hybrid / enc-dec off the pooled-KV path).
     """
     cdt = _dt(rcfg.compute_dtype)
     uk = rcfg.use_kernels
@@ -321,8 +321,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     return cache
 
 
-def init_paged_cache(cfg: ModelConfig, n_lanes: int, n_blocks: int,
-                     block_size: int, dtype) -> dict:
+def init_pool_cache(cfg: ModelConfig, n_lanes: int, n_blocks: int,
+                    block_size: int, dtype) -> dict:
     """Pooled KV cache: ``n_blocks`` usable blocks + 1 sink (block id 0).
 
     Unlike :func:`init_cache` the pool is sized by LIVE TOKENS

@@ -1,0 +1,552 @@
+"""Cache backends: every decode-state layout behind ONE protocol.
+
+The serving engine holds exactly one :class:`CacheBackend` and speaks only
+its verbs — it has no idea whether lanes are dense ``max_len`` strips, a
+shared block pool, or pooled recurrent state.  Model-side capabilities
+come from ``model.decode_state`` (:class:`repro.models.api.DecodeState`);
+eligibility is decided there once and realised here once, so adding a new
+layout (quantized KV, host offload, sharded multi-device cache) means one
+new subclass, not another optional hook + engine branch.
+
+Protocol (one backend instance per engine; ``slot`` is a lane index):
+
+* ``token_footprint(n_ctx, max_new, tokens)`` — admission charge, in the
+  backend's capacity units (cache positions for attention layouts, state
+  units for recurrent ones).  Prefix-cache aware for the paged layout.
+* ``alloc(n_ctx, final_len, tokens)`` — reserve capacity for one request:
+  a :class:`Reservation` on success, ``None`` when it cannot fit *now*
+  (spill back to the queue), or :data:`INFEASIBLE` when it can never fit
+  (reject up front instead of livelocking).
+* ``prefill_paste(slot, group_cache, src_lane, n_ctx, width, res)`` —
+  scatter one lane of a (possibly right-padded, batched) prefill cache
+  into the backend's storage for ``slot``.
+* ``activate(slot, res)`` — install a FULL-HIT reservation without any
+  prefill: every needed K/V position is already cached, so the lane
+  starts directly in decode (TTFT skips the prefill entirely).
+* ``prepare_lane(slot)`` — make the lane's next write position safe
+  before a decode step: grow into a fresh block, COW-split a shared one,
+  or uncache a sole-holder cached one.  ``False`` = out of memory, the
+  engine must preempt a victim and retry.
+* ``step(params, tokens, active)`` — advance every lane one token.
+* ``snapshot(slot)`` / ``restore(slot, snap)`` — preemption support:
+  backends with cheap constant-size state return it host-side so a
+  preempted request resumes WITHOUT recompute; ``None`` means the
+  recompute (re-prefill) policy applies.
+* ``release(slot, tokens)`` — free the lane; paged registers the token
+  content actually written so future prompts can prefix-match it.
+
+Implementations:
+
+* :class:`DenseBackend` — one ``max_len``-wide lane per slot (the
+  original layout; admission is bound by lane count).
+* :class:`PagedBackend` — block-pooled KV with refcounted
+  copy-on-write prefix caching over :class:`BlockManager`.
+* :class:`RecurrentBackend` — ssm / rwkv / hybrid: a pool of
+  constant-footprint state lanes (admission charged in state units, not
+  fictitious ``max_len`` tokens) with snapshot/restore preemption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.serving.block_manager import BlockManager
+
+# alloc() verdict: the request can NEVER fit (final footprint exceeds the
+# pool or the lane span) — reject up front, don't requeue forever.
+INFEASIBLE = object()
+
+
+@dataclasses.dataclass
+class Reservation:
+    """Capacity reserved by ``alloc`` for one admission.
+
+    ``blocks`` / ``n_cached`` are paged-layout details (empty elsewhere);
+    ``full_hit`` marks a reservation whose every context position short of
+    the last is already cached — the engine skips prefill and calls
+    ``activate``.  ``n_lookup`` is the token count of the prefix-cache
+    query (0 = no lookup happened) for hit-rate accounting.
+    """
+
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    n_cached: int = 0
+    n_lookup: int = 0
+    full_hit: bool = False
+
+
+def _lane_axes(model: Model, n_lanes: int, max_len: int):
+    """Locate each cache leaf's lane axis ONCE by diffing the shapes of two
+    abstract caches that differ only in batch (-1 = no lane axis)."""
+    s_a = jax.eval_shape(lambda: model.init_cache(n_lanes, max_len))
+    s_b = jax.eval_shape(lambda: model.init_cache(n_lanes + 1, max_len))
+
+    def lane_axis(a, b):
+        for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
+            if da != db:
+                return ax
+        return -1
+
+    return jax.tree.map(lane_axis, s_a, s_b), s_a
+
+
+class CacheBackend:
+    """Base class: the dense-lane defaults every layout can fall back on."""
+
+    name = "dense"
+
+    def __init__(self, model: Model, n_lanes: int, max_len: int):
+        self.model = model
+        self.n_lanes = n_lanes
+        self.max_len = max_len
+
+    # -- gauges (zeros unless the layout tracks them) -------------------
+    n_blocks = 0
+    blocks_in_use = 0
+    peak_blocks = 0
+    shared_blocks_peak = 0
+    cow_splits = 0
+    cache_evictions = 0
+    # bumped whenever capacity/match state changes; footprints computed at
+    # one version stay valid while it holds (engine memoizes against it)
+    state_version = 0
+
+    # capacity the admission scheduler may pack against; None = the lane
+    # count is the only bound (footprints are not budget-constrained)
+    @property
+    def budget_tokens(self) -> Optional[int]:
+        return None
+
+    @property
+    def capacity_tokens(self) -> Optional[int]:
+        return None
+
+    def reset_counters(self) -> None:
+        pass
+
+
+class DenseBackend(CacheBackend):
+    """One ``max_len``-wide cache lane per slot (the original layout)."""
+
+    name = "dense"
+
+    def __init__(self, model: Model, n_lanes: int, max_len: int):
+        super().__init__(model, n_lanes, max_len)
+        from repro.models.attention import cache_span
+
+        self._span = cache_span(model.cfg, max_len) \
+            if model.decode_state.kind != "encdec" else max_len
+        self.cache = model.init_cache(n_lanes, max_len)
+        self._lane_ax, _ = _lane_axes(model, n_lanes, max_len)
+        self._decode = jax.jit(model.decode_step, donate_argnums=1)
+
+        def paste(cache, src_cache, src_lane, dst_slot):
+            """Copy lane ``src_lane`` of a prefill cache into decode lane
+            ``dst_slot``.  Lane indices are traced, so every admission
+            reuses one compile per source-batch shape."""
+            def fix(ax, dst, src):
+                if ax < 0:
+                    return dst
+                piece = jax.lax.dynamic_index_in_dim(src, src_lane, axis=ax,
+                                                     keepdims=True)
+                idx = tuple(dst_slot if i == ax else 0
+                            for i in range(dst.ndim))
+                return jax.lax.dynamic_update_slice(
+                    dst, piece.astype(dst.dtype), idx)
+            return jax.tree.map(fix, self._lane_ax, cache, src_cache)
+
+        self._paste = jax.jit(paste, donate_argnums=0)
+
+    # ------------------------------------------------------------------
+    def token_footprint(self, n_ctx: int, max_new: int,
+                        tokens: Optional[Sequence[int]] = None) -> int:
+        # a lane is max_len wide no matter how short the request is —
+        # that fiction is exactly what the paged layout removes
+        return self._span
+
+    def alloc(self, n_ctx: int, final_len: int,
+              tokens: Optional[Sequence[int]] = None):
+        # dense lanes admit anything (writes past max_len clamp, as the
+        # pre-paged engine always did); capacity is the lane count, which
+        # the engine bounds before calling alloc
+        return Reservation()
+
+    def prefill_paste(self, slot: int, group_cache, src_lane: int,
+                      n_ctx: int, width: int, res: Reservation) -> None:
+        self.cache = self._paste(self.cache, group_cache,
+                                 jnp.int32(src_lane), jnp.int32(slot))
+
+    def activate(self, slot: int, res: Reservation, n_ctx: int) -> None:
+        raise NotImplementedError("dense lanes never produce full hits")
+
+    def prepare_lane(self, slot: int) -> bool:
+        return True
+
+    def step(self, params, tokens: np.ndarray, active: np.ndarray):
+        logits, self.cache = self._decode(params, self.cache,
+                                          jnp.asarray(tokens))
+        return logits
+
+    def snapshot(self, slot: int) -> Optional[Any]:
+        return None          # recompute policy: resume re-prefills
+
+    def restore(self, slot: int, snap: Any) -> bool:
+        return False
+
+    def release(self, slot: int,
+                tokens: Optional[Sequence[int]] = None) -> None:
+        pass                 # lane garbage is overwritten by the next paste
+
+
+class RecurrentBackend(DenseBackend):
+    """Pooled constant-footprint lanes for recurrent-state families.
+
+    ssm / rwkv / hybrid decode state does not grow with context length —
+    per lane it is a fixed bundle (conv tail + ssm state / rwkv matrix
+    state / hybrid shared-attention span).  These families were previously
+    exiled to dense lanes with a fictitious ``max_len``-token admission
+    charge; ``token_footprint`` now reports the true per-lane state size.
+    Every lane costs the same, so admission stays exactly lane-bound (the
+    scheduler's budget packing only engages for backends with a finite
+    ``budget_tokens``, i.e. paged) — the constant unit is there for
+    observability and for future layouts that spill state.  The real win
+    is preemption: ``snapshot`` copies the (small, fixed) state host-side
+    and a preempted request resumes with ZERO recompute.
+    """
+
+    name = "recurrent"
+
+    def __init__(self, model: Model, n_lanes: int, max_len: int):
+        super().__init__(model, n_lanes, max_len)
+        # true per-lane state size (elements across all cache leaves)
+        _, shapes = _lane_axes(model, n_lanes, max_len)
+        sizes = jax.tree.leaves(jax.tree.map(
+            lambda ax, s: int(np.prod(s.shape)) // (s.shape[ax] if ax >= 0 else 1)
+            if ax >= 0 else 0, self._lane_ax, shapes))
+        self.state_units = int(sum(sizes))
+
+        def extract(cache, slot):
+            def fix(ax, leaf):
+                if ax < 0:
+                    return leaf
+                return jax.lax.dynamic_index_in_dim(leaf, slot, axis=ax,
+                                                    keepdims=True)
+            return jax.tree.map(fix, self._lane_ax, cache)
+
+        self._extract = jax.jit(extract)
+
+    def token_footprint(self, n_ctx: int, max_new: int,
+                        tokens: Optional[Sequence[int]] = None) -> int:
+        return self.state_units     # independent of prompt/generation length
+
+    def snapshot(self, slot: int) -> Any:
+        snap = self._extract(self.cache, jnp.int32(slot))
+        return jax.tree.map(np.asarray, snap)   # host-side, survives donation
+
+    def restore(self, slot: int, snap: Any) -> bool:
+        self.cache = self._paste(self.cache, snap, jnp.int32(0),
+                                 jnp.int32(slot))
+        return True
+
+
+class PagedBackend(CacheBackend):
+    """Block-pooled KV with refcounted copy-on-write prefix caching."""
+
+    name = "paged"
+
+    def __init__(self, model: Model, n_lanes: int, max_len: int,
+                 kv_blocks: int, block_size: int,
+                 watermark_frac: float = 0.0, prefix_cache: bool = False):
+        super().__init__(model, n_lanes, max_len)
+        ds = model.decode_state
+        self.blocks = BlockManager(kv_blocks, block_size, watermark_frac)
+        self.prefix_cache = prefix_cache
+        self.max_blocks_per_lane = -(-max_len // block_size)
+        self.cache = ds.pool_init(n_lanes, kv_blocks, block_size)
+        self.block_tables = np.zeros(
+            (n_lanes, self.max_blocks_per_lane), np.int32)
+        self._lane_blocks: List[List[int]] = [[] for _ in range(n_lanes)]
+        self._lane_pos = np.zeros((n_lanes,), np.int64)
+        self._decode = jax.jit(ds.pool_step, donate_argnums=1)
+
+        def paste(cache, src_layers, src_lane, flat_idx, dst_slot, length):
+            """Scatter lane ``src_lane`` of a prefill cache into this
+            lane's allocated pool blocks.  ``flat_idx`` (width,) maps
+            prefill positions to flattened pool slots; positions past the
+            real context — and positions already covered by SHARED cache
+            blocks, which must never be rewritten — point at the sink."""
+            def fix(pool, src):
+                nl = pool.shape[0]
+                flat = pool.reshape((nl, -1) + pool.shape[3:])
+                piece = jax.lax.dynamic_index_in_dim(
+                    src, src_lane, axis=1, keepdims=False)
+                piece = jax.lax.slice_in_dim(
+                    piece, 0, flat_idx.shape[0], axis=1)
+                flat = flat.at[:, flat_idx].set(piece.astype(flat.dtype))
+                return flat.reshape(pool.shape)
+            layers = {"k": fix(cache["layers"]["k"], src_layers["k"]),
+                      "v": fix(cache["layers"]["v"], src_layers["v"])}
+            pos = cache["pos"].at[dst_slot].set(length)
+            return {"layers": layers, "pos": pos}
+
+        self._paste = jax.jit(paste, donate_argnums=0)
+
+        def set_pos(cache, slot, val):
+            return {"layers": cache["layers"],
+                    "pos": cache["pos"].at[slot].set(val)}
+
+        self._set_pos = jax.jit(set_pos, donate_argnums=0)
+
+        def cow_copy(cache, src, dst):
+            """Duplicate one pool block (all layers, K and V) dst <- src."""
+            def fix(pool):
+                return pool.at[:, dst].set(pool[:, src])
+            return {"layers": {"k": fix(cache["layers"]["k"]),
+                               "v": fix(cache["layers"]["v"])},
+                    "pos": cache["pos"]}
+
+        self._cow_copy = jax.jit(cow_copy, donate_argnums=0)
+
+    # -- gauges ---------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:                           # type: ignore[override]
+        return self.blocks.n_blocks
+
+    @property
+    def blocks_in_use(self) -> int:                      # type: ignore[override]
+        return self.blocks.in_use
+
+    @property
+    def peak_blocks(self) -> int:                        # type: ignore[override]
+        return self.blocks.peak_in_use
+
+    @property
+    def shared_blocks_peak(self) -> int:                 # type: ignore[override]
+        return self.blocks.shared_peak
+
+    @property
+    def cow_splits(self) -> int:                         # type: ignore[override]
+        return self.blocks.cow_splits
+
+    @property
+    def cache_evictions(self) -> int:                    # type: ignore[override]
+        return self.blocks.evictions
+
+    @property
+    def state_version(self) -> int:                      # type: ignore[override]
+        return self.blocks.version
+
+    @property
+    def budget_tokens(self) -> Optional[int]:
+        bm = self.blocks
+        return max(0, bm.free - bm.watermark_blocks) * bm.block_size
+
+    @property
+    def capacity_tokens(self) -> Optional[int]:
+        bm = self.blocks
+        return (bm.n_blocks - bm.watermark_blocks) * bm.block_size
+
+    def reset_counters(self) -> None:
+        bm = self.blocks
+        bm.peak_in_use = bm.in_use
+        bm.shared_peak = bm.shared_now
+        bm.cow_splits = 0
+        bm.evictions = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def token_footprint(self, n_ctx: int, max_new: int,
+                        tokens: Optional[Sequence[int]] = None) -> int:
+        """Free-pool tokens this admission would consume NOW: blocks for
+        the context, minus blocks already held live by other lanes (a
+        refcount-zero cache hit still consumes a free block when revived,
+        so only live-shared hits are discounted)."""
+        bm = self.blocks
+        need = bm.blocks_needed(n_ctx)
+        if self.prefix_cache and tokens is not None:
+            m = bm.match_prefix(tokens)
+            need -= sum(1 for b in m.blocks if bm.ref_count(b) > 0)
+        return need * bm.block_size
+
+    def alloc(self, n_ctx: int, final_len: int,
+              tokens: Optional[Sequence[int]] = None):
+        bm = self.blocks
+        # feasibility is judged on the FINAL footprint: the context plus
+        # every token the request may still generate.  A request admitted
+        # on prompt size alone but over-budget at completion would die in
+        # a preempt/reject loop; one past max_len could resume with more
+        # context than the prefill cache span holds.  Blocks freed by
+        # prefix sharing don't relax this bound: COW can re-privatise
+        # every shared block before the request completes.
+        usable = bm.n_blocks - bm.watermark_blocks
+        if final_len > self.max_len or bm.blocks_needed(final_len) > usable:
+            return INFEASIBLE
+        hits: List[int] = []
+        n_cached = n_lookup = 0
+        if self.prefix_cache and tokens is not None:
+            m = bm.match_prefix(tokens)
+            hits, n_cached, n_lookup = list(m.blocks), m.n_tokens, n_ctx
+        need = bm.blocks_needed(n_ctx)
+        fresh_n = need - len(hits)
+        revived = sum(1 for b in hits if bm.ref_count(b) == 0)
+        # admission charges only blocks the free pool actually loses:
+        # fresh allocations plus revived cache hits; live-shared blocks
+        # ride along for free
+        if not bm.can_admit(fresh_n + revived):
+            return None
+        for b in hits:
+            bm.ref(b)        # BEFORE allocate(): hits must not be evicted
+        fresh = bm.allocate(fresh_n) if fresh_n else []
+        blocks = hits + fresh
+        if self.prefix_cache and tokens is not None:
+            # register the prompt's full blocks NOW (content arrives with
+            # this round's paste, before any decode dispatch reads it) so
+            # same-round admissions already share them
+            bm.register(blocks, tokens)
+        full_hit = bool(self.prefix_cache and tokens is not None
+                        and n_cached >= n_ctx - 1)
+        return Reservation(blocks=blocks, n_cached=n_cached,
+                           n_lookup=n_lookup, full_hit=full_hit)
+
+    def _flat_idx(self, blocks: List[int], n_cached: int, n_ctx: int,
+                  width: int) -> np.ndarray:
+        """Flattened pool slots for prefill positions 0..width-1: positions
+        the lane must write go to its blocks; the pad tail AND the shared
+        cached prefix (already holding identical K/V) go to the sink."""
+        bs = self.blocks.block_size
+        i = np.arange(width)
+        phys = (i % bs).astype(np.int64)               # sink by default
+        mine = (i >= n_cached) & (i < n_ctx)
+        ids = np.asarray(blocks, np.int64)
+        phys[mine] = ids[i[mine] // bs] * bs + i[mine] % bs
+        return phys
+
+    def prefill_paste(self, slot: int, group_cache, src_lane: int,
+                      n_ctx: int, width: int, res: Reservation) -> None:
+        flat = self._flat_idx(res.blocks, res.n_cached, n_ctx, width)
+        self.cache = self._paste(self.cache, group_cache["layers"],
+                                 jnp.int32(src_lane), jnp.asarray(flat),
+                                 jnp.int32(slot), jnp.int32(n_ctx))
+        self._install(slot, res.blocks, n_ctx)
+
+    def activate(self, slot: int, res: Reservation, n_ctx: int) -> None:
+        """Full hit: every context position short of the last is cached.
+        The lane starts at pos = n_ctx - 1 and its first decode step feeds
+        the last context token — no prefill dispatch at all."""
+        self.cache = self._set_pos(self.cache, jnp.int32(slot),
+                                   jnp.int32(n_ctx - 1))
+        self._install(slot, res.blocks, n_ctx - 1)
+
+    def _install(self, slot: int, blocks: List[int], pos: int) -> None:
+        self._lane_blocks[slot] = list(blocks)
+        self.block_tables[slot, :] = 0
+        self.block_tables[slot, :len(blocks)] = blocks
+        self._lane_pos[slot] = pos
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def prepare_lane(self, slot: int) -> bool:
+        """Make the lane's next write position safe: grow into a fresh
+        block on a boundary, COW-split a shared block on first write, or
+        uncache a sole-holder cached block whose content will diverge.
+        False = pool exhausted (the engine preempts and retries)."""
+        bm = self.blocks
+        bs = bm.block_size
+        bidx = int(self._lane_pos[slot]) // bs
+        if bidx >= self.max_blocks_per_lane:
+            return True                  # saturated: dense-path clamp
+        blocks = self._lane_blocks[slot]
+        if bidx >= len(blocks):
+            blk = bm.allocate_one()
+            if blk is None:
+                return False
+            blocks.append(blk)
+            self.block_tables[slot, bidx] = blk
+            return True
+        blk = blocks[bidx]
+        if bm.ref_count(blk) > 1:
+            fresh = bm.cow_split(blk)
+            if fresh is None:
+                return False
+            self.cache = self._cow_copy(self.cache, jnp.int32(blk),
+                                        jnp.int32(fresh))
+            blocks[bidx] = fresh
+            self.block_tables[slot, bidx] = fresh
+        elif bm.is_cached(blk):
+            bm.uncache(blk)              # sole holder: write in place
+        return True
+
+    def step(self, params, tokens: np.ndarray, active: np.ndarray):
+        logits, self.cache = self._decode(params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(self.block_tables))
+        self._lane_pos[active] += 1
+        return logits
+
+    def snapshot(self, slot: int) -> Optional[Any]:
+        return None          # recompute policy (resume prefix-matches the
+        #                      blocks registered at release, so the
+        #                      re-prefill is usually a full hit anyway)
+
+    def restore(self, slot: int, snap: Any) -> bool:
+        return False
+
+    def release(self, slot: int,
+                tokens: Optional[Sequence[int]] = None) -> None:
+        blocks = self._lane_blocks[slot]
+        if blocks:
+            if self.prefix_cache and tokens is not None:
+                n_valid = min(int(self._lane_pos[slot]), len(tokens))
+                self.blocks.register(blocks, tokens[:n_valid])
+            self.blocks.release(blocks)
+        self._lane_blocks[slot] = []
+        self.block_tables[slot, :] = 0
+        self._lane_pos[slot] = 0
+
+
+def make_backend(model: Model, n_lanes: int, max_len: int,
+                 config) -> CacheBackend:
+    """Pick the backend for (model, engine config).
+
+    ``config`` is the engine's :class:`~repro.serving.engine.EngineConfig`.
+    ``config.backend`` forces a layout (``"dense" | "paged" | "recurrent"``);
+    the default ``None`` auto-selects: a block pool wherever the family
+    supports it and ``kv_blocks`` is set, pooled recurrent lanes for
+    recurrent-state families, dense lanes otherwise.
+    """
+    ds = model.decode_state
+    choice = config.backend
+    if choice is None:
+        if config.kv_blocks is not None and ds.poolable:
+            choice = "paged"
+        elif ds.kind == "recurrent":
+            choice = "recurrent"
+        else:
+            choice = "dense"
+    if choice == "paged":
+        if not ds.poolable:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no pool-layout decode "
+                f"state; only attention-K/V families are pageable")
+        if config.kv_blocks is None:
+            raise ValueError("backend='paged' requires EngineConfig.kv_blocks")
+        return PagedBackend(model, n_lanes, max_len,
+                            kv_blocks=config.kv_blocks,
+                            block_size=config.kv_block_size,
+                            watermark_frac=config.watermark_frac,
+                            prefix_cache=config.prefix_cache)
+    if choice == "recurrent":
+        if ds.kind != "recurrent":
+            raise ValueError(
+                f"backend='recurrent' on a {ds.kind!r}-state family")
+        return RecurrentBackend(model, n_lanes, max_len)
+    if choice == "dense":
+        return DenseBackend(model, n_lanes, max_len)
+    raise ValueError(f"unknown backend {choice!r}")

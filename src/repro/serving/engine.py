@@ -1,4 +1,4 @@
-"""Serving engine: continuous-batching KV-cache decode with batched prefill.
+"""Serving engine: continuous-batching decode over a pluggable CacheBackend.
 
 Slots: a fixed max_batch of cache lanes; queued requests are admitted into
 free lanes by a pluggable :mod:`scheduler` policy, decode advances every
@@ -6,33 +6,37 @@ active lane one token per step, finished lanes free immediately (continuous
 batching).  Works for every decoder-only family and whisper (enc-dec)
 through the Model protocol.
 
-KV memory comes in two layouts:
+Decode state lives behind ONE object — a
+:class:`~repro.serving.backends.CacheBackend` — and the engine speaks only
+its protocol (``alloc / prefill_paste / step / snapshot / release /
+token_footprint``).  Which backend an engine gets is decided once by
+:func:`~repro.serving.backends.make_backend`:
 
-* **dense** (default) — one ``max_len``-wide cache lane per slot; admission
-  capacity is ``max_batch`` regardless of how short requests actually are.
+* **dense** — one ``max_len``-wide cache lane per slot.
 * **paged** (``EngineConfig.kv_blocks``) — a shared pool of fixed-size KV
-  blocks (:mod:`repro.serving.block_manager`); lanes hold per-request block
-  tables, admission allocates just the blocks a prompt needs, decode grows
-  tables one block at a time, and when the pool is exhausted the engine
-  PREEMPTS the most recently admitted lane (LIFO / recompute policy): its
-  blocks are released and the request is requeued carrying its generated
-  tokens and sampler state, so on re-admission it prefills prompt+generated
-  in one shot and resumes token-identically.  Families whose decode state
-  is not a position-addressed K/V cache (ssm / rwkv / hybrid / enc-dec)
-  have no ``decode_step_paged`` hook and silently fall back to dense lanes.
+  blocks; admission allocates just the blocks a prompt needs, decode grows
+  tables one block at a time, and exhaustion PREEMPTS the most recently
+  admitted lane (LIFO / recompute policy), which later resumes
+  token-identically.  With ``EngineConfig.prefix_cache`` the pool becomes
+  content-addressed: full prompt blocks are shared copy-on-write across
+  lanes, admission charges only unique blocks, and a fully-cached prompt
+  skips its prefill dispatch outright.
+* **recurrent** — ssm / rwkv / hybrid families get pooled
+  constant-footprint state lanes; preemption snapshots the (small,
+  fixed-size) state host-side and resumes with zero recompute.
 
 Prefill is **bucketed and batched**: prompts are right-padded to a small set
-of length buckets and several admissions share ONE jitted
-``model.prefill_ragged`` dispatch (exact for full-causal-attention configs —
-see :func:`repro.models.lm.lm_prefill_ragged`), whose per-lane caches are
-then pasted into their decode lanes.  Families where padding would perturb
-the state (ssm / rwkv / hybrid / enc-dec), and requests carrying extra
-model inputs, fall back to the per-request exact-length prefill.
+of length buckets and several admissions share ONE jitted batched-prefill
+dispatch (exact for full-causal-attention configs — see
+:func:`repro.models.lm.lm_prefill_padded`), whose per-lane caches are then
+pasted into their decode lanes.  Families where padding would perturb the
+state (ssm / rwkv / hybrid / enc-dec), and requests carrying extra model
+inputs, fall back to the per-request exact-length prefill.
 
 Decoding is per-request :class:`~repro.serving.sampling.SamplingParams`
 (greedy / temperature / top-k / top-p, seeded per-lane PRNG streams), and a
 :class:`~repro.serving.metrics.MetricsCollector` keeps TTFT / TPOT /
-throughput / utilisation / preemption / block accounting;
+throughput / utilisation / preemption / block / prefix-cache accounting;
 ``metrics_snapshot()`` returns the structured reading.
 """
 
@@ -40,14 +44,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
-from repro.serving.block_manager import BlockManager
+from repro.serving.backends import INFEASIBLE, Reservation, make_backend
 from repro.serving.metrics import EngineSnapshot, MetricsCollector
 from repro.serving.sampling import (GREEDY, LaneSampling, SamplingParams,
                                     sample_tokens)
@@ -64,17 +69,25 @@ class EngineConfig:
     vocabularies where 0 is a live token can pick an unambiguous filler for
     logging/debugging, instead of a hardcoded module constant.
 
-    ``kv_blocks`` switches the KV cache to the paged layout: a pool of that
-    many usable ``kv_block_size``-token blocks shared by all lanes (plus an
-    internal sink block).  ``watermark_frac`` of the pool is held back from
-    admission as headroom for decode-time growth — 0 admits greedily and
-    relies purely on preemption; a small reserve (e.g. 0.05) trades a
-    little admission capacity for fewer preemptions under pressure.
+    ``kv_blocks`` switches eligible families to the paged backend: a pool
+    of that many usable ``kv_block_size``-token blocks shared by all lanes
+    (plus an internal sink block).  ``watermark_frac`` of the pool is held
+    back from admission as headroom for decode-time growth — 0 admits
+    greedily and relies purely on preemption.
+
+    ``prefix_cache`` (paged only) turns on refcounted copy-on-write prompt
+    sharing: identical prompt prefixes are admitted against the SAME
+    physical blocks, and fully-cached prompts skip prefill.
+
+    ``backend`` forces a cache layout (``"dense" | "paged" | "recurrent"``)
+    instead of the automatic choice — chiefly for tests and A/B benches.
     """
     pad_id: int = 0
     kv_blocks: Optional[int] = None
     kv_block_size: int = 16
     watermark_frac: float = 0.0
+    prefix_cache: bool = False
+    backend: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -95,6 +108,11 @@ class Request:
     # PRNG counter frozen at preemption so a stochastic request resumes on
     # exactly the sample stream it would have continued on
     saved_key: Optional[np.ndarray] = None
+    # backend state snapshot (recurrent lanes): resume without recompute
+    saved_state: Optional[Any] = None
+    # (out_len, backend.state_version, value) — memoized admission
+    # footprint, so a queued request isn't re-hashed every engine step
+    fp_memo: Optional[Tuple[int, int, int]] = None
 
 
 def default_buckets(max_len: int, smallest: int = 16) -> Tuple[int, ...]:
@@ -138,96 +156,20 @@ class ServeEngine:
         self.steps = 0
         self.finished: List[Request] = []
 
-        # KV layout: paged pool when configured AND the family supports it
-        self.paged = (self.config.kv_blocks is not None
-                      and model.decode_step_paged is not None)
-        if self.paged:
-            bs = self.config.kv_block_size
-            self.blocks: Optional[BlockManager] = BlockManager(
-                self.config.kv_blocks, bs, self.config.watermark_frac)
-            self.max_blocks_per_lane = -(-max_len // bs)
-            self.cache = model.init_paged_cache(max_batch,
-                                                self.config.kv_blocks, bs)
-            self.block_tables = np.zeros(
-                (max_batch, self.max_blocks_per_lane), np.int32)
-            self._lane_blocks: List[List[int]] = [[] for _ in range(max_batch)]
-            self._lane_pos = np.zeros((max_batch,), np.int64)
-            self._reserved: Dict[int, List[int]] = {}     # rid -> admit blocks
-            self._decode_paged = jax.jit(model.decode_step_paged,
-                                         donate_argnums=1)
-        else:
-            self.blocks = None
-            self.cache = model.init_cache(max_batch, max_len)
+        # ALL decode state (layout, growth, sharing, snapshots) lives here
+        self.backend = make_backend(model, max_batch, max_len, self.config)
+        self.metrics = MetricsCollector(n_slots=max_batch,
+                                        n_blocks=self.backend.n_blocks)
 
-        self.metrics = MetricsCollector(
-            n_slots=max_batch,
-            n_blocks=self.blocks.n_blocks if self.paged else 0)
-
-        self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self._prefill1 = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
-        if model.prefill_ragged is not None:
+        batched = model.decode_state.batched_prefill
+        if batched is not None:
             self._prefill_n = jax.jit(
-                lambda p, toks, lens: model.prefill_ragged(
+                lambda p, toks, lens: batched(
                     p, {"tokens": toks}, lens, max_len))
         else:
             self._prefill_n = None
-
-        if self.paged:
-            def paste_paged(cache, src_layers, src_lane, flat_idx, dst_slot,
-                            length):
-                """Scatter lane ``src_lane`` of a prefill cache into this
-                lane's allocated pool blocks.  ``flat_idx`` (width,) maps
-                prefill positions to flattened pool slots; positions past
-                the real context point at the sink block."""
-                def fix(pool, src):
-                    nl = pool.shape[0]
-                    flat = pool.reshape((nl, -1) + pool.shape[3:])
-                    piece = jax.lax.dynamic_index_in_dim(
-                        src, src_lane, axis=1, keepdims=False)
-                    piece = jax.lax.slice_in_dim(
-                        piece, 0, flat_idx.shape[0], axis=1)
-                    flat = flat.at[:, flat_idx].set(piece.astype(flat.dtype))
-                    return flat.reshape(pool.shape)
-                layers = {"k": fix(cache["layers"]["k"], src_layers["k"]),
-                          "v": fix(cache["layers"]["v"], src_layers["v"])}
-                pos = cache["pos"].at[dst_slot].set(length)
-                return {"layers": layers, "pos": pos}
-
-            self._paste_paged = jax.jit(paste_paged, donate_argnums=0)
-        else:
-            # Locate each cache leaf's lane axis ONCE by diffing the shapes
-            # of two abstract caches that differ only in batch (-1 = no lane
-            # axis, e.g. scalars shared across lanes).
-            s_a = jax.eval_shape(lambda: model.init_cache(max_batch, max_len))
-            s_b = jax.eval_shape(
-                lambda: model.init_cache(max_batch + 1, max_len))
-
-            def lane_axis(a, b):
-                for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
-                    if da != db:
-                        return ax
-                return -1
-
-            self._lane_ax = jax.tree.map(lane_axis, s_a, s_b)
-
-            def paste(cache, src_cache, src_lane, dst_slot):
-                """Copy lane ``src_lane`` of a prefill cache into decode lane
-                ``dst_slot``.  Lane indices are traced, so every admission
-                reuses one compile per source-batch shape."""
-                def fix(ax, dst, src):
-                    if ax < 0:
-                        return dst
-                    piece = jax.lax.dynamic_index_in_dim(src, src_lane,
-                                                         axis=ax,
-                                                         keepdims=True)
-                    idx = tuple(dst_slot if i == ax else 0
-                                for i in range(dst.ndim))
-                    return jax.lax.dynamic_update_slice(
-                        dst, piece.astype(dst.dtype), idx)
-                return jax.tree.map(fix, self._lane_ax, cache, src_cache)
-
-            self._paste = jax.jit(paste, donate_argnums=0)
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -255,6 +197,14 @@ class ServeEngine:
         return np.concatenate(
             [req.prompt, np.asarray(req.out_tokens, np.int32)])
 
+    def _cache_tokens(self, req: Request) -> Optional[np.ndarray]:
+        """Token content backing the request's cache positions, or None
+        when positions aren't pure tokens (frontend rows / extra inputs) —
+        such requests can neither hit nor feed the prefix cache."""
+        if req.extra:
+            return None
+        return self._prefill_tokens(req)
+
     def _ctx_len(self, req: Request) -> int:
         """Cache positions the prefill will occupy (frontend rows included)."""
         n = len(req.prompt) + len(req.out_tokens)
@@ -262,6 +212,25 @@ class ServeEngine:
         if fe is not None:
             n += fe.shape[0]
         return n
+
+    def _final_len(self, req: Request) -> int:
+        """Positions held at completion: context + every still-to-come
+        token except the last (which is sampled but never written)."""
+        return self._ctx_len(req) - len(req.out_tokens) + req.max_new - 1
+
+    def _footprint(self, req: Request) -> int:
+        """Admission footprint, memoized against the backend's state
+        version — without this, footprint-aware pops would re-hash every
+        queued prompt (prefix-cache match) on every engine step."""
+        ver = self.backend.state_version
+        out_len = len(req.out_tokens)
+        m = req.fp_memo
+        if m is not None and m[0] == out_len and m[1] == ver:
+            return m[2]
+        v = self.backend.token_footprint(self._ctx_len(req), req.max_new,
+                                         self._cache_tokens(req))
+        req.fp_memo = (out_len, ver, v)
+        return v
 
     def _bucket_len(self, n: int) -> int:
         for b in self.buckets:
@@ -271,57 +240,14 @@ class ServeEngine:
         # fresh prefill executable per distinct prompt length
         return self.max_len
 
-    def _flat_idx(self, blocks: List[int], n_ctx: int,
-                  width: int) -> np.ndarray:
-        """Flattened pool slots for prefill positions 0..width-1: real
-        context goes to the lane's blocks, pad tail to the sink (block 0)."""
-        bs = self.blocks.block_size
-        i = np.arange(width)
-        phys = (i % bs).astype(np.int64)               # sink for the tail
-        real = i < n_ctx
-        ids = np.asarray(blocks, np.int64)
-        phys[real] = ids[i[real] // bs] * bs + i[real] % bs
-        return phys
-
-    def _reserve_blocks(self, batch: List[Request]) -> List[Request]:
-        """Allocate each admission's prompt blocks up front; spill whatever
-        doesn't fit back to the queue (allocate-on-admit)."""
-        admitted: List[Request] = []
-        # blocks a request may need at any (re-)admission; watermark
-        # included, else a request could pass feasibility yet never pass
-        # can_admit — livelocking itself and everything queued behind it
-        usable = self.blocks.n_blocks - self.blocks.watermark_blocks
-        for i, req in enumerate(batch):
-            n_ctx = self._ctx_len(req)
-            # feasibility is judged on the FINAL footprint: the context
-            # plus every token the request may still generate (>= n_ctx).
-            # A request admitted on prompt size alone but over-budget at
-            # completion would generate half its tokens and then die in a
-            # preempt/reject loop; one past max_len could resume with more
-            # context than the prefill cache span holds.  Unlike the dense
-            # layout (which lossily CLAMPS writes past max_len), paged
-            # mode rejects such requests up front.
-            final = n_ctx - len(req.out_tokens) + req.max_new - 1
-            if final > self.max_len or self.blocks.blocks_needed(final) > usable:
-                self.scheduler.reject(req)
-                continue
-            need = self.blocks.blocks_needed(n_ctx)
-            if not self.blocks.can_admit(need):
-                for r in batch[i:]:
-                    self.scheduler.requeue(r)
-                break
-            self._reserved[req.rid] = self.blocks.allocate(need)
-            admitted.append(req)
-        return admitted
-
-    def _admit_group(self, reqs: List[Request], slots: List[int],
-                     logits: jax.Array, group_cache, now: float,
+    def _admit_group(self, items: List[Tuple[Request, Reservation]],
+                     slots: List[int], logits, group_cache, now: float,
                      widths: List[int]) -> None:
         """Sample all first tokens in ONE dispatch, then paste each lane.
         ``widths[j]`` is the prefill width request j was padded to (its
         bucket length, or its exact context length on the fallback path)."""
         ls = self.lane_sampling
-        for req, slot in zip(reqs, slots):
+        for (req, _), slot in zip(items, slots):
             ls.set_lane(slot, req.sampling)
             if req.saved_key is not None:     # resume: continue the stream
                 ls.key[slot] = req.saved_key
@@ -333,7 +259,7 @@ class ServeEngine:
                                      jnp.asarray(ls.key[idx]))
         toks, new_kd = np.asarray(toks), np.asarray(new_kd)
         t_first = time.perf_counter()
-        for j, (req, slot) in enumerate(zip(reqs, slots)):
+        for j, ((req, res), slot) in enumerate(zip(items, slots)):
             ls.key[slot] = new_kd[j]
             n_ctx = self._ctx_len(req)
             tok = int(toks[j])
@@ -345,28 +271,19 @@ class ServeEngine:
                 self.metrics.on_resume(req, now)
             req.admitted_t = now
             req.saved_key = None
+            # paste EVERY admission — even one that finishes right here —
+            # so blocks the reservation registered in the prefix cache
+            # hold real content before anyone prefix-matches them
+            self.backend.prefill_paste(slot, group_cache, j, n_ctx,
+                                       widths[j], res)
             if len(req.out_tokens) >= req.max_new or tok == self.eos_id:
                 # finished at admission: never occupies a decode lane
                 req.done_t = t_first
                 ls.clear_lane(slot)
-                if self.paged:
-                    self.blocks.release(self._reserved.pop(req.rid))
+                self.backend.release(slot, tokens=self._cache_tokens(req))
                 self.finished.append(req)
                 self.metrics.on_finish(req, t_first)
                 continue
-            if self.paged:
-                blocks = self._reserved.pop(req.rid)
-                flat = self._flat_idx(blocks, n_ctx, widths[j])
-                self.cache = self._paste_paged(
-                    self.cache, group_cache["layers"], jnp.int32(j),
-                    jnp.asarray(flat), jnp.int32(slot), jnp.int32(n_ctx))
-                self._lane_blocks[slot] = blocks
-                self.block_tables[slot, :] = 0
-                self.block_tables[slot, :len(blocks)] = blocks
-                self._lane_pos[slot] = n_ctx
-            else:
-                self.cache = self._paste(self.cache, group_cache,
-                                         jnp.int32(j), jnp.int32(slot))
             self.slots[slot] = req
 
     def _admit(self) -> None:
@@ -381,34 +298,66 @@ class ServeEngine:
         if not free:
             return False
         now = time.perf_counter()
-        batch = self.scheduler.pop(len(free), now)
-        if self.paged and batch:
-            batch = self._reserve_blocks(batch)
+        batch = self.scheduler.pop(
+            len(free), now, footprint=self._footprint,
+            budget=self.backend.budget_tokens,
+            capacity=self.backend.capacity_tokens)
         if not batch:
             return False
         n_done_before = len(self.finished)
 
-        # split into batched-eligible vs exact-length fallback
-        batched: List[Request] = []
-        fallback: List[Request] = []
-        for req in batch:
+        # reserve capacity per request (allocate-on-admit): reject what can
+        # never fit, spill what can't fit NOW back to the queue
+        held: List[Tuple[Request, Reservation]] = []
+        for i, req in enumerate(batch):
+            res = self.backend.alloc(self._ctx_len(req), self._final_len(req),
+                                     self._cache_tokens(req))
+            if res is INFEASIBLE:
+                self.scheduler.reject(req)
+                continue
+            if res is None:
+                for r in batch[i:]:
+                    self.scheduler.requeue(r)
+                break
+            held.append((req, res))
+
+        # split: snapshot restores and full cache hits skip prefill wholly;
+        # the rest go through batched-bucketed or exact-length prefill
+        batched: List[Tuple[Request, Reservation]] = []
+        fallback: List[Tuple[Request, Reservation]] = []
+        for req, res in held:
+            if res.n_lookup:
+                self.metrics.on_prefix_lookup(res.n_cached, res.n_lookup)
+            if req.saved_state is not None:
+                # restore() is side-effect-free when it declines, so the
+                # slot is only consumed on success
+                if self.backend.restore(free[0], req.saved_state):
+                    self._resume_lane(req, free.pop(0), now)
+                    continue
+                req.saved_state = None      # backend can't use it: recompute
+            if res.full_hit:
+                slot = free.pop(0)
+                self.backend.activate(slot, res, self._ctx_len(req))
+                self._resume_lane(req, slot, now)
+                self.metrics.on_prefill_skip()
+                continue
             ok = (self._prefill_n is not None and not req.extra
                   and self._ctx_len(req) <= self.max_len)
-            (batched if ok else fallback).append(req)
+            (batched if ok else fallback).append((req, res))
 
         # group eligible requests by padded bucket length, then chunk each
         # group to the prefill batch limit -> one dispatch per chunk
         groups = {}
-        for req in batched:
+        for req, res in batched:
             groups.setdefault(self._bucket_len(self._ctx_len(req)),
-                              []).append(req)
-        for blen, reqs in sorted(groups.items()):
-            for i in range(0, len(reqs), self.max_prefill_batch):
-                chunk = reqs[i:i + self.max_prefill_batch]
+                              []).append((req, res))
+        for blen, items in sorted(groups.items()):
+            for i in range(0, len(items), self.max_prefill_batch):
+                chunk = items[i:i + self.max_prefill_batch]
                 toks = np.full((len(chunk), blen), self.config.pad_id,
                                np.int32)
                 lens = np.zeros((len(chunk),), np.int32)
-                for j, req in enumerate(chunk):
+                for j, (req, _) in enumerate(chunk):
                     seq = self._prefill_tokens(req)
                     toks[j, :len(seq)] = seq
                     lens[j] = len(seq)
@@ -418,21 +367,38 @@ class ServeEngine:
                 slots = [free.pop(0) for _ in chunk]
                 self._admit_group(chunk, slots, logits, group_cache, now,
                                   widths=[blen] * len(chunk))
-        for req in fallback:
+        for req, res in fallback:
             seq = self._prefill_tokens(req)
             b = {"tokens": jnp.asarray(seq[None])}
             for k, v in req.extra.items():
                 b[k] = jnp.asarray(v[None])
             logits, one_cache = self._prefill1(self.params, b)
             self.metrics.on_prefill(1)
-            self._admit_group([req], [free.pop(0)], logits, one_cache, now,
-                              widths=[self._ctx_len(req)])
+            self._admit_group([(req, res)], [free.pop(0)], logits, one_cache,
+                              now, widths=[self._ctx_len(req)])
 
         return (len(self.finished) > n_done_before
                 and self.scheduler.depth > 0)
 
+    def _resume_lane(self, req: Request, slot: int, now: float) -> None:
+        """Place a request on a lane WITHOUT a prefill dispatch (state
+        restore or full prefix hit); its next token is produced by the
+        next decode step, which feeds the last context token."""
+        ls = self.lane_sampling
+        ls.set_lane(slot, req.sampling)
+        if req.saved_key is not None:
+            ls.key[slot] = req.saved_key
+        if req.admitted_t is None:
+            self.metrics.on_admit(req, now)
+        else:
+            self.metrics.on_resume(req, now)
+        req.admitted_t = now
+        req.saved_key = None
+        req.saved_state = None
+        self.slots[slot] = req
+
     # ------------------------------------------------------------------
-    # paged growth / preemption
+    # growth / preemption
     # ------------------------------------------------------------------
     def _pick_victim(self) -> int:
         """LIFO (recompute) policy: preempt the most recently admitted lane
@@ -443,43 +409,35 @@ class ServeEngine:
                    key=lambda i: (self.slots[i].admitted_t,
                                   self.slots[i].rid))
 
-    def _preempt(self, slot: int) -> None:
+    def preempt(self, slot: int) -> None:
+        """Evict the lane: snapshot what the backend can save cheaply,
+        release its capacity, and requeue the request (which resumes
+        token-identically — by restore, or by recompute-prefill)."""
         req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"lane {slot} is idle: nothing to preempt")
         req.preemptions += 1
         req.saved_key = self.lane_sampling.key[slot].copy()
-        self.blocks.release(self._lane_blocks[slot])
-        self._lane_blocks[slot] = []
-        self.block_tables[slot, :] = 0
-        self._lane_pos[slot] = 0
+        req.saved_state = self.backend.snapshot(slot)
+        self.backend.release(slot, tokens=self._cache_tokens(req))
         self.slots[slot] = None
         self.lane_sampling.clear_lane(slot)
         self.scheduler.requeue(req)
         self.metrics.on_preempt(req)
 
-    def _grow_lanes(self) -> None:
-        """Grow-on-decode: before a step, every active lane whose next write
-        position crosses into an unallocated block gets one; exhaustion
-        preempts victims (possibly the needy lane itself) until it frees."""
-        bs = self.blocks.block_size
+    def _prepare_lanes(self) -> None:
+        """Before a decode step, every active lane must have a writable
+        private block at its next position (grow / COW-split / uncache —
+        see ``CacheBackend.prepare_lane``); exhaustion preempts victims
+        (possibly the needy lane itself) until it frees."""
         for slot in range(self.max_batch):
             if self.slots[slot] is None:
                 continue
-            bidx = int(self._lane_pos[slot]) // bs
-            if bidx >= self.max_blocks_per_lane:
-                continue                  # saturated: dense-path clamp
-            if bidx < len(self._lane_blocks[slot]):
-                continue
-            blk = self.blocks.allocate_one()
-            while blk is None:
+            while not self.backend.prepare_lane(slot):
                 victim = self._pick_victim()
-                self._preempt(victim)
+                self.preempt(victim)
                 if victim == slot:
                     break
-                blk = self.blocks.allocate_one()
-            if self.slots[slot] is None:  # lane preempted itself
-                continue
-            self._lane_blocks[slot].append(blk)
-            self.block_tables[slot, bidx] = blk
 
     # ------------------------------------------------------------------
     # decode
@@ -489,29 +447,28 @@ class ServeEngine:
 
     def step(self) -> int:
         """Admit + one decode step for all active lanes. Returns #active."""
-        if self.paged:
-            # grow RUNNING lanes before admission takes the last free
-            # blocks — else a fresh admission pays a whole prefill only to
-            # be the LIFO victim of an older lane's growth this same step
-            self._grow_lanes()
+        # grow RUNNING lanes before admission takes the last free blocks —
+        # else a fresh admission pays a whole prefill only to be the LIFO
+        # victim of an older lane's growth this same step
+        self._prepare_lanes()
         self._admit()
-        if self.paged:
-            # second pass covers lanes admitted above whose context ends
-            # exactly on a block boundary (first write needs a new block)
-            self._grow_lanes()
+        # second pass covers lanes admitted above whose context ends
+        # exactly on a block boundary, plus full-hit lanes whose first
+        # write lands in a shared block (COW split)
+        self._prepare_lanes()
         if self.active() == 0:
             return 0
         toks = np.zeros((self.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
-            if req is not None and req.out_tokens:
-                toks[i, 0] = req.out_tokens[-1]
-        if self.paged:
-            logits, self.cache = self._decode_paged(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.block_tables))
-        else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks))
+            if req is None:
+                continue
+            # normally the lane's last sampled token; a lane admitted
+            # without prefill (restore / full hit) re-feeds its last
+            # context token to produce the next logits
+            toks[i, 0] = req.out_tokens[-1] if req.out_tokens \
+                else req.prompt[-1]
+        active = np.asarray([s is not None for s in self.slots])
+        logits = self.backend.step(self.params, toks, active)
         ls = self.lane_sampling
         nxt, new_kd = sample_tokens(logits[:, :self.vocab],
                                     jnp.asarray(ls.temperature),
@@ -525,25 +482,20 @@ class ServeEngine:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            if self.paged:
-                self._lane_pos[i] += 1
             tok = int(nxt[i])
             req.out_tokens.append(tok)
+            if req.first_token_t is None:   # prefill-skipping admissions
+                req.first_token_t = now
             if len(req.out_tokens) >= req.max_new or tok == self.eos_id:
                 req.done_t = now
                 self.slots[i] = None                # lane freed immediately
                 ls.clear_lane(i)
-                if self.paged:
-                    self.blocks.release(self._lane_blocks[i])
-                    self._lane_blocks[i] = []
-                    self.block_tables[i, :] = 0
-                    self._lane_pos[i] = 0
+                self.backend.release(i, tokens=self._cache_tokens(req))
                 self.finished.append(req)
                 self.metrics.on_finish(req, now)
         self.steps += 1
         self.metrics.on_step(self.scheduler.depth, busy, now,
-                             blocks_in_use=(self.blocks.in_use
-                                            if self.paged else 0))
+                             blocks_in_use=self.backend.blocks_in_use)
         return self.active()
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
@@ -551,6 +503,14 @@ class ServeEngine:
             # step() admits first, so one call per iteration does both
             if self.step() == 0 and not self.scheduler.depth:
                 break
+        else:
+            if self.active() or self.scheduler.depth:
+                warnings.warn(
+                    f"run_until_drained exhausted max_steps={max_steps} "
+                    f"with {self.active()} active lanes and "
+                    f"{self.scheduler.depth} queued requests — returning "
+                    f"PARTIAL results ({len(self.finished)} finished)",
+                    RuntimeWarning, stacklevel=2)
         return self.finished
 
     # ------------------------------------------------------------------
@@ -570,15 +530,16 @@ class ServeEngine:
         self.scheduler.rejected_total = 0
         self.scheduler.expired_total = 0
         self.steps = 0
-        self.metrics = MetricsCollector(
-            n_slots=self.max_batch,
-            n_blocks=self.blocks.n_blocks if self.paged else 0)
-        if self.paged:
-            self.blocks.peak_in_use = self.blocks.in_use
+        self.metrics = MetricsCollector(n_slots=self.max_batch,
+                                        n_blocks=self.backend.n_blocks)
+        self.backend.reset_counters()
 
     def metrics_snapshot(self) -> EngineSnapshot:
         return self.metrics.snapshot(
             queue_depth_now=self.scheduler.depth,
             rejected=self.scheduler.rejected_total,
             expired=self.scheduler.expired_total,
-            kv_blocks_peak=self.blocks.peak_in_use if self.paged else 0)
+            kv_blocks_peak=self.backend.peak_blocks,
+            kv_shared_blocks_peak=self.backend.shared_blocks_peak,
+            cow_splits=self.backend.cow_splits,
+            cache_evictions=self.backend.cache_evictions)

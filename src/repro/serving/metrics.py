@@ -18,7 +18,7 @@ suitable for logging, benches, and assertions in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 def _percentile(xs: List[float], q: float) -> float:
@@ -75,6 +75,16 @@ class EngineSnapshot:
     kv_blocks_total: int
     kv_blocks_peak: int                # high-watermark blocks in use
     kv_block_utilization: float        # step-weighted mean in_use fraction
+    # prefix-cache accounting (zero unless EngineConfig.prefix_cache)
+    prefix_lookups: int                # admissions that queried the cache
+    prefix_hit_tokens: int             # context tokens served from cache
+    prefix_query_tokens: int           # context tokens looked up
+    prefix_hit_rate: float             # token-weighted hits / lookups
+    prefix_hit_series: Tuple[float, ...]   # per-admission hit fraction
+    prefill_skipped: int               # fully-cached prompts: no prefill
+    cow_splits: int                    # shared blocks privatised on write
+    kv_shared_blocks_peak: int         # high-watermark refcount>=2 blocks
+    cache_evictions: int               # cached free blocks reclaimed
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -97,6 +107,11 @@ class MetricsCollector:
         self.resumes = 0
         self.prefill_dispatches = 0
         self.prefill_requests = 0
+        self.prefix_lookups = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_query_tokens = 0
+        self.prefix_hit_series: List[float] = []
+        self.prefill_skipped = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -112,6 +127,16 @@ class MetricsCollector:
 
     def on_preempt(self, req) -> None:
         self.preemptions += 1
+
+    def on_prefix_lookup(self, hit_tokens: int, query_tokens: int) -> None:
+        self.prefix_lookups += 1
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_query_tokens += query_tokens
+        self.prefix_hit_series.append(
+            hit_tokens / query_tokens if query_tokens else 0.0)
+
+    def on_prefill_skip(self) -> None:
+        self.prefill_skipped += 1
 
     def on_resume(self, req, now: float) -> None:
         self.resumes += 1
@@ -138,7 +163,9 @@ class MetricsCollector:
 
     # ------------------------------------------------------------------
     def snapshot(self, *, queue_depth_now: int = 0, rejected: int = 0,
-                 expired: int = 0, kv_blocks_peak: int = 0) -> EngineSnapshot:
+                 expired: int = 0, kv_blocks_peak: int = 0,
+                 kv_shared_blocks_peak: int = 0, cow_splits: int = 0,
+                 cache_evictions: int = 0) -> EngineSnapshot:
         wall = 0.0
         if self._t_first is not None and self._t_last is not None:
             wall = max(self._t_last - self._t_first, 0.0)
@@ -169,4 +196,14 @@ class MetricsCollector:
             kv_block_utilization=(
                 self._blocks_sum / (self.steps * self.n_blocks)
                 if self.steps and self.n_blocks else 0.0),
+            prefix_lookups=self.prefix_lookups,
+            prefix_hit_tokens=self.prefix_hit_tokens,
+            prefix_query_tokens=self.prefix_query_tokens,
+            prefix_hit_rate=(self.prefix_hit_tokens / self.prefix_query_tokens
+                             if self.prefix_query_tokens else 0.0),
+            prefix_hit_series=tuple(self.prefix_hit_series),
+            prefill_skipped=self.prefill_skipped,
+            cow_splits=cow_splits,
+            kv_shared_blocks_peak=kv_shared_blocks_peak,
+            cache_evictions=cache_evictions,
         )

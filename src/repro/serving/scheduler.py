@@ -13,6 +13,12 @@ and enforces queue limits and per-request deadlines:
 open-loop overload answer is admission control, not an unbounded queue), and
 a request whose ``deadline_s`` elapses while still queued is dropped at pop
 time rather than wasting prefill compute on an answer nobody is waiting for.
+
+``pop`` is additionally FOOTPRINT-AWARE: a cache backend with a finite
+capacity budget (the paged layout: free pool tokens, prefix-cache aware)
+passes it with ``token_footprint``, and requests are packed against real
+memory instead of popped blindly and bounced back; lane-bound backends
+(dense, recurrent) pass no budget and get the plain take-k pop.
 """
 
 from __future__ import annotations
@@ -110,13 +116,40 @@ class AdmissionScheduler:
             return lambda r: (-r.priority, r.submitted_t, r.rid)
         return lambda r: (r.submitted_t, r.rid)
 
-    def pop(self, k: int, now: float) -> List:
-        """Take up to ``k`` requests to admit, best-first per policy."""
+    def pop(self, k: int, now: float, footprint: Optional[Callable] = None,
+            budget: Optional[int] = None,
+            capacity: Optional[int] = None) -> List:
+        """Take up to ``k`` requests to admit, best-first per policy.
+
+        Footprint-aware admission: when the engine's cache backend exposes
+        a capacity ``budget`` (e.g. free paged-KV tokens, prefix-cache
+        aware), a request whose ``footprint(req)`` exceeds the remaining
+        budget is SKIPPED — left queued, in order — and cheaper requests
+        behind it may be packed instead of the whole pop stalling on one
+        big prompt.  A request too big even for ``capacity`` (the whole
+        pool) is still popped: the backend's ``alloc`` is the authority
+        that rejects infeasible work up front, and hiding it in the queue
+        forever would silently drop it."""
         if k <= 0:
             return []
         self._drop_expired(now)
         self._queue.sort(key=self._rank())
-        taken, self._queue = self._queue[:k], self._queue[k:]
+        if footprint is None or budget is None:
+            taken, self._queue = self._queue[:k], self._queue[k:]
+            return taken
+        taken, kept = [], []
+        remaining = budget
+        for r in self._queue:
+            if len(taken) >= k:
+                kept.append(r)
+                continue
+            f = footprint(r)
+            if f > remaining and (capacity is None or f <= capacity):
+                kept.append(r)            # may fit later: keep waiting
+                continue
+            remaining -= f
+            taken.append(r)
+        self._queue = kept
         return taken
 
     def peek_order(self) -> List:

@@ -61,8 +61,17 @@ class AgentTrace:
 
 
 def _generate(engine: ServeEngine, prompt: np.ndarray, n_tokens: int,
-              sampling: Optional[SamplingParams] = None) -> None:
-    """Timed decode work standing in for LRM reasoning/summarisation."""
+              sampling: Optional[SamplingParams] = None,
+              prefix: Optional[np.ndarray] = None) -> None:
+    """Timed decode work standing in for LRM reasoning/summarisation.
+
+    ``prefix`` is the scenario scaffold (system prompt + tool-loop
+    boilerplate) prepended to EVERY turn — exactly the shape of agentic
+    traffic that a prefix-cached engine serves without re-prefilling the
+    scaffold on each turn."""
+    if prefix is not None:
+        prompt = np.concatenate([np.asarray(prefix, np.int32),
+                                 np.asarray(prompt, np.int32)])
     engine.submit(prompt, max_new=n_tokens, sampling=sampling)
     engine.run_until_drained()
 
@@ -71,12 +80,20 @@ def run_scenario(engine: ServeEngine, executor: ToolExecutor,
                  queries: List[str], *, async_tools: bool,
                  reason_tokens: int = 12, summary_tokens: int = 24,
                  seed: int = 0,
-                 sampling: Optional[SamplingParams] = None) -> AgentTrace:
+                 sampling: Optional[SamplingParams] = None,
+                 prefix_tokens: int = 0) -> AgentTrace:
     """The paper's A.4 scenario: N begin_search (async) or N [search+wait]
-    (sync), then per query: retrieve -> summarize."""
+    (sync), then per query: retrieve -> summarize.
+
+    ``prefix_tokens > 0`` prepends a fixed scenario prefix (seeded, so
+    every turn shares it) to each generation turn, driving the engine's
+    prefix cache end-to-end: turn 1 populates it, later turns admit
+    against shared blocks and (once fully cached) skip prefill."""
     rng = np.random.default_rng(seed)
     vocab = engine.model.cfg.vocab_size
     prompt = lambda: rng.integers(0, vocab, size=8)
+    prefix = (np.random.default_rng(seed + 1).integers(
+        0, vocab, size=prefix_tokens) if prefix_tokens else None)
     trace = AgentTrace(t_start=time.perf_counter())
 
     def span(kind, label=""):
@@ -95,22 +112,22 @@ def run_scenario(engine: ServeEngine, executor: ToolExecutor,
         for q in queries:
             executor.begin("vector_db_begin_search", query=q, k=5)
         with span("reason", "initial reasoning / planning"):
-            _generate(engine, prompt(), reason_tokens, sampling)
+            _generate(engine, prompt(), reason_tokens, sampling, prefix)
         for q in queries:
             with span("tool_wait", f"retrieve({q})"):
                 executor.retrieve()
             with span("summarize", f"summary({q})"):
-                _generate(engine, prompt(), summary_tokens, sampling)
+                _generate(engine, prompt(), summary_tokens, sampling, prefix)
     else:
         # Fig. 8 baseline: tool on the critical path
         with span("reason", "initial reasoning / planning"):
-            _generate(engine, prompt(), reason_tokens, sampling)
+            _generate(engine, prompt(), reason_tokens, sampling, prefix)
         for q in queries:
             executor.begin("vector_db_begin_search", query=q, k=5)
             with span("tool_wait", f"search({q}) [blocking]"):
                 executor.retrieve()
             with span("summarize", f"summary({q})"):
-                _generate(engine, prompt(), summary_tokens, sampling)
+                _generate(engine, prompt(), summary_tokens, sampling, prefix)
 
     trace.t_end = time.perf_counter()
     return trace

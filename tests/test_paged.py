@@ -52,18 +52,22 @@ def test_block_manager_alloc_release_watermark():
         BlockManager(0, 4)
 
 
-def test_paged_gate_excludes_nonattention_state():
-    """Paged hooks only where decode state is a position-addressed K/V
-    cache: dense + moe.  Recurrent / enc-dec families must fall back."""
+def test_pool_gate_excludes_nonattention_state():
+    """The pool layout is offered only where decode state is a
+    position-addressed K/V cache: dense + moe.  Recurrent / enc-dec
+    families advertise their own state kind instead."""
     for arch in ("granite-8b", "grok-1-314b", "llama4-scout-17b-a16e"):
         m = build_model(reduced_config(get_config(arch)), RCFG)
         if m.cfg.attention == "full":
-            assert m.decode_step_paged is not None, arch
-            assert m.init_paged_cache is not None, arch
-    for arch in ("rwkv6-1.6b", "zamba2-7b", "whisper-small"):
+            assert m.decode_state.poolable, arch
+            assert m.decode_state.kind == "attention", arch
+    for arch in ("rwkv6-1.6b", "zamba2-7b"):
         m = build_model(reduced_config(get_config(arch)), RCFG)
-        assert m.decode_step_paged is None, arch
-        assert m.init_paged_cache is None, arch
+        assert not m.decode_state.poolable, arch
+        assert m.decode_state.kind == "recurrent", arch
+    m = build_model(reduced_config(get_config("whisper-small")), RCFG)
+    assert not m.decode_state.poolable
+    assert m.decode_state.kind == "encdec"
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +85,7 @@ def test_dense_vs_paged_decode_logit_parity(small_lm):
     logits, dense = model.prefill(params,
                                   {"tokens": jnp.asarray(prompt[None])},
                                   max_len)
-    paged = model.init_paged_cache(1, 10, bs)
+    paged = model.decode_state.pool_init(1, 10, bs)
     blocks = [4, 2, 9]                          # deliberately out of order
     flat = np.array([blocks[i // bs] * bs + i % bs for i in range(P)])
     for kk in ("k", "v"):
@@ -101,7 +105,8 @@ def test_dense_vs_paged_decode_logit_parity(small_lm):
     for _ in range(6):
         t = jnp.asarray([[tok]], jnp.int32)
         ld, dense = model.decode_step(params, dense, t)
-        lp, paged = model.decode_step_paged(params, paged, t, jnp.asarray(bt))
+        lp, paged = model.decode_state.pool_step(params, paged, t,
+                                                 jnp.asarray(bt))
         np.testing.assert_allclose(np.asarray(ld[0, :v]),
                                    np.asarray(lp[0, :v]), atol=1e-5)
         tok = int(jnp.argmax(ld[0, :v]))
@@ -209,10 +214,10 @@ def test_admission_with_zero_free_blocks_waits(small_lm):
                         max_new=2)
     eng._admit()
     assert eng.active() == 1                # only the first fits
-    assert eng.scheduler.depth == 1 and eng.blocks.free == 0
+    assert eng.scheduler.depth == 1 and eng.backend.blocks.free == 0
     done = eng.run_until_drained()
     assert sorted(r.rid for r in done) == [first, second]
-    assert eng.blocks.free == 2             # everything released
+    assert eng.backend.blocks.free == 2     # everything released
 
 
 def test_request_larger_than_pool_is_rejected(small_lm):
@@ -302,15 +307,19 @@ def test_pad_id_is_inert_and_configurable(small_lm):
     assert base == other
 
 
-def test_paged_config_on_unsupported_family_falls_back(small_lm):
-    """Requesting paged KV for a family without the hooks silently runs the
-    dense layout (ISSUE: dense fallback for ssm/rwkv/hybrid/enc-dec)."""
+def test_paged_config_on_recurrent_family_gets_recurrent_backend(small_lm):
+    """Requesting paged KV for a non-pageable recurrent family no longer
+    silently drops to dense lanes: it gets the pooled constant-footprint
+    RecurrentBackend (and still serves correctly)."""
+    from repro.serving.backends import RecurrentBackend
+
     cfg = reduced_config(get_config("rwkv6-1.6b"))
     model = build_model(cfg, RCFG)
     params = model.init(jax.random.key(1))
     eng = ServeEngine(model, params, max_batch=2, max_len=32,
                       config=EngineConfig(kv_blocks=16, kv_block_size=4))
-    assert not eng.paged
+    assert isinstance(eng.backend, RecurrentBackend)
+    assert eng.backend.token_footprint(6, 3) == eng.backend.state_units > 0
     rng = np.random.default_rng(8)
     eng.submit(rng.integers(0, cfg.vocab_size, size=6), max_new=3)
     done = eng.run_until_drained()

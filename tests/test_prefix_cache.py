@@ -1,0 +1,310 @@
+"""CacheBackend protocol, COW prefix caching, and backend parity."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.models.api import build_model
+from repro.serving.block_manager import BlockManager
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.scheduler import AdmissionScheduler
+
+RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    model = build_model(cfg, RCFG)
+    return model, model.init(jax.random.key(0))
+
+
+def _serve(model, params, prompts, config=None, max_batch=4, max_new=5,
+           max_len=64):
+    eng = ServeEngine(model, params, max_batch=max_batch, max_len=max_len,
+                      config=config)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    done = eng.run_until_drained()
+    return {r.rid: r.out_tokens for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# block manager: refcounts / COW / content cache
+# ---------------------------------------------------------------------------
+
+def test_refcount_share_and_staged_release():
+    m = BlockManager(6, block_size=4)
+    a = m.allocate(2)
+    m.ref(a[0])                               # second holder
+    assert m.ref_count(a[0]) == 2 and m.shared_now == 1
+    m.release(a)                              # holder 1 drops both
+    assert m.ref_count(a[0]) == 1 and m.in_use == 1 and m.shared_now == 0
+    m.release([a[0]])                         # holder 2 drops the shared one
+    assert m.in_use == 0 and m.free == 6
+
+
+def test_double_release_of_shared_block_rejected():
+    """Releasing more times than there are holders must fail loudly — a
+    stray extra free would hand one physical block to two lanes."""
+    m = BlockManager(4, block_size=4)
+    a = m.allocate(1)
+    m.ref(a[0])
+    m.release(a)
+    m.release(a)                              # both holders gone
+    with pytest.raises(ValueError):
+        m.release(a)                          # third release: over-free
+    with pytest.raises(ValueError):
+        m.release([a[0], a[0]])               # dup ids in one call
+
+
+def test_cow_split_allocates_and_derefs():
+    m = BlockManager(4, block_size=4)
+    a = m.allocate(1)
+    m.ref(a[0])
+    fresh = m.cow_split(a[0])
+    assert fresh is not None and fresh != a[0]
+    assert m.ref_count(a[0]) == 1 and m.ref_count(fresh) == 1
+    assert m.cow_splits == 1
+    with pytest.raises(ValueError):
+        m.cow_split(a[0])                     # no longer shared
+
+
+def test_cow_split_under_pressure_returns_none_without_side_effects():
+    m = BlockManager(2, block_size=4)
+    a = m.allocate(2)                         # pool exhausted
+    m.ref(a[0])
+    assert m.cow_split(a[0]) is None          # caller must preempt
+    assert m.ref_count(a[0]) == 2 and m.cow_splits == 0
+
+
+def test_register_match_revive_and_evict():
+    m = BlockManager(3, block_size=4)
+    toks = np.arange(10)                      # 2 full blocks + tail of 2
+    blocks = m.allocate(3)
+    assert m.register(blocks, toks) == 2      # partial tail not registered
+    # full-block match, then full-coverage partial-tail match
+    full = m.match_prefix(np.arange(8))
+    assert list(full.blocks) == blocks[:2] and full.n_tokens == 8
+    part = m.match_prefix(np.arange(6))
+    assert part.n_tokens == 6 and part.tail_partial
+    assert list(part.blocks) == blocks[:2]
+    # a diverging prefix must not match block 2's chain
+    assert m.match_prefix(np.array([9, 9, 9, 9, 4, 5])).n_tokens == 0
+    # rc0-cached blocks stay matchable until memory pressure evicts them
+    m.release(blocks)
+    assert m.match_prefix(np.arange(8)).n_tokens == 8
+    m.ref(blocks[0])                          # revive the first
+    assert m.ref_count(blocks[0]) == 1
+    # allocation prefers the never-cached free block (the unregistered
+    # tail), then LRU-evicts exactly one cached block
+    got = m.allocate(2)
+    assert m.evictions == 1 and set(got) == set(blocks[1:])
+    assert m.match_prefix(np.arange(8)).n_tokens == 4   # only b0 survives
+    m.uncache(blocks[0])                      # sole holder about to write
+    assert m.match_prefix(np.arange(8)).n_tokens == 0
+
+
+def test_reregistration_must_be_consistent():
+    m = BlockManager(3, block_size=2)
+    blocks = m.allocate(2)
+    m.register(blocks, np.array([1, 2, 3, 4]))
+    m.register(blocks, np.array([1, 2, 3, 4]))       # idempotent
+    with pytest.raises(ValueError):
+        m.register(blocks, np.array([5, 6, 7, 8]))   # content changed
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: sharing, COW, preemption with shared blocks
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_admits_more_lanes_token_identically(small_lm):
+    """Requests sharing a prompt prefix must (a) decode the same tokens as
+    an uncached engine and (b) charge the pool only once for the prefix."""
+    model, params = small_lm
+    rng = np.random.default_rng(10)
+    prefix = rng.integers(0, model.cfg.vocab_size, size=24)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, model.cfg.vocab_size,
+                                            size=int(n))])
+               for n in (5, 9, 3, 7)]
+    plain, _ = _serve(model, params, prompts,
+                      EngineConfig(kv_blocks=60, kv_block_size=4))
+    cached, eng = _serve(model, params, prompts,
+                         EngineConfig(kv_blocks=60, kv_block_size=4,
+                                      prefix_cache=True))
+    snap = eng.metrics_snapshot()
+    assert plain == cached
+    assert snap.prefix_hit_rate > 0.4
+    assert snap.kv_shared_blocks_peak >= 6      # 24-token prefix, bs=4
+    # shared blocks counted once: peak usage beats 4 private copies
+    assert snap.kv_blocks_peak < 4 * 10
+
+
+def test_full_hit_skips_prefill_and_cow_splits_on_write(small_lm):
+    """Re-serving a fully-cached prompt must skip the prefill dispatch;
+    two concurrent full-hit lanes write into the same shared tail block,
+    so exactly one must COW-split — with token-identical output."""
+    model, params = small_lm
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, model.cfg.vocab_size, size=10)
+    ref, _ = _serve(model, params, [p], max_batch=2)
+    eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                      config=EngineConfig(kv_blocks=30, kv_block_size=4,
+                                          prefix_cache=True))
+    w = eng.submit(p, max_new=5)                 # warm: registers the tail
+    warm = {r.rid: r.out_tokens for r in eng.run_until_drained()}
+    a = eng.submit(p, max_new=5)
+    b = eng.submit(p, max_new=5)
+    done = {r.rid: r.out_tokens for r in eng.run_until_drained()}
+    snap = eng.metrics_snapshot()
+    assert done[a] == done[b] == warm[w] == ref[0]
+    assert snap.prefill_skipped == 2
+    assert snap.cow_splits >= 1
+
+
+def test_preempt_resume_of_lane_holding_shared_blocks(small_lm):
+    """Preemption under pressure with prefix sharing live: refcounts must
+    survive the release/requeue/resume cycle and outputs must match an
+    unpressured engine token-for-token."""
+    model, params = small_lm
+    rng = np.random.default_rng(12)
+    prefix = rng.integers(0, model.cfg.vocab_size, size=12)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, model.cfg.vocab_size,
+                                            size=int(n))])
+               for n in (6, 9, 4, 8)]
+    ample, _ = _serve(model, params, prompts, max_new=7)
+    tight, eng = _serve(model, params, prompts, max_new=7,
+                        config=EngineConfig(kv_blocks=12, kv_block_size=4,
+                                            prefix_cache=True))
+    snap = eng.metrics_snapshot()
+    assert snap.preemptions > 0 and snap.resumes > 0
+    assert ample == tight
+    assert eng.backend.blocks.in_use == 0       # every ref returned
+
+
+def test_recurrent_preempt_restores_without_recompute():
+    """RecurrentBackend snapshots constant-size state host-side; a
+    preempted lane must resume token-identically with NO extra prefill
+    dispatch (dense/paged recompute would need one)."""
+    cfg = reduced_config(get_config("rwkv6-1.6b"))
+    model = build_model(cfg, RCFG)
+    params = model.init(jax.random.key(1))
+    prompt = np.random.default_rng(13).integers(0, cfg.vocab_size, size=6)
+    ref = ServeEngine(model, params, max_batch=1, max_len=32)
+    ref.submit(prompt, max_new=6)
+    want = ref.run_until_drained()[0].out_tokens
+    eng = ServeEngine(model, params, max_batch=1, max_len=32)
+    eng.submit(prompt, max_new=6)
+    eng.step()
+    eng.step()
+    eng.preempt(0)
+    got = eng.run_until_drained()[0].out_tokens
+    snap = eng.metrics_snapshot()
+    assert got == want
+    assert snap.preemptions == 1 and snap.resumes == 1
+    assert snap.prefill_dispatches == 1          # restore, not recompute
+
+
+# ---------------------------------------------------------------------------
+# backend parity: dense vs paged vs recurrent, per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,layouts", [
+    ("granite-8b", ("dense", "paged", "paged+cache")),   # attention
+    ("grok-1-314b", ("dense", "paged")),                 # moe
+    ("rwkv6-1.6b", ("dense", "recurrent")),              # rwkv
+    ("zamba2-7b", ("dense", "recurrent")),               # hybrid ssm+attn
+])
+def test_backend_parity_token_identical(arch, layouts):
+    """Every cache layout a family supports must produce token-identical
+    greedy output — the backend is a memory-management choice, never a
+    model-behaviour choice."""
+    cfg = dataclasses.replace(reduced_config(get_config(arch)), n_layers=2)
+    model = build_model(cfg, RCFG)
+    params = model.init(jax.random.key(2))
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n))
+               for n in (5, 11, 8)]
+    configs = {
+        "dense": EngineConfig(backend="dense"),
+        "paged": EngineConfig(kv_blocks=48, kv_block_size=4),
+        "paged+cache": EngineConfig(kv_blocks=48, kv_block_size=4,
+                                    prefix_cache=True),
+        "recurrent": EngineConfig(backend="recurrent"),
+    }
+    outs = {}
+    for name in layouts:
+        outs[name], eng = _serve(model, params, prompts, configs[name],
+                                 max_batch=3, max_new=4, max_len=32)
+        want = name.split("+")[0]
+        assert eng.backend.name == want
+    first = outs[layouts[0]]
+    for name in layouts[1:]:
+        assert outs[name] == first, f"{arch}: {name} diverged from dense"
+
+
+def test_forced_backend_validation(small_lm):
+    model, params = small_lm
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    config=EngineConfig(backend="paged"))   # no kv_blocks
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    config=EngineConfig(backend="recurrent"))  # attention
+    cfg = reduced_config(get_config("whisper-small"))
+    wmodel = build_model(cfg, RCFG)
+    with pytest.raises(ValueError):
+        ServeEngine(wmodel, wmodel.init(jax.random.key(3)), max_batch=1,
+                    max_len=32,
+                    config=EngineConfig(backend="paged", kv_blocks=8))
+
+
+def test_model_exposes_no_legacy_optional_hooks(small_lm):
+    """API acceptance: the old per-capability Optional hooks are gone from
+    the Model protocol; capabilities live in decode_state only."""
+    model, _ = small_lm
+    for legacy in ("prefill_ragged", "init_paged_cache", "decode_step_paged"):
+        assert not hasattr(model, legacy), legacy
+    assert model.decode_state.poolable
+
+
+# ---------------------------------------------------------------------------
+# satellites: drain warning + footprint-aware scheduler
+# ---------------------------------------------------------------------------
+
+def test_run_until_drained_warns_on_exhausted_steps(small_lm):
+    model, params = small_lm
+    rng = np.random.default_rng(15)
+    eng = ServeEngine(model, params, max_batch=1, max_len=64)
+    eng.submit(rng.integers(0, model.cfg.vocab_size, size=5), max_new=40)
+    with pytest.warns(RuntimeWarning, match="PARTIAL"):
+        done = eng.run_until_drained(max_steps=3)
+    assert done == [] and eng.active() == 1      # work genuinely unfinished
+
+
+def test_scheduler_footprint_aware_pop_packs_and_defers():
+    """pop() with a backend budget must skip (keep queued, in order) what
+    cannot fit now, pack cheaper requests behind it, and still pop
+    beyond-capacity requests so the backend can reject them."""
+    from repro.serving.engine import Request
+
+    sched = AdmissionScheduler()
+    mk = lambda rid, n: Request(rid, np.zeros((n,), np.int32),
+                                submitted_t=float(rid))
+    for rid, n in [(0, 10), (1, 3), (2, 4), (3, 99)]:
+        sched.push(mk(rid, n), 0.0)
+    taken = sched.pop(4, 1.0, footprint=lambda r: len(r.prompt),
+                      budget=8, capacity=50)
+    # 0 (10 tokens) deferred; 1+2 packed; 3 (99 > capacity) popped for
+    # the backend's INFEASIBLE rejection
+    assert [r.rid for r in taken] == [1, 2, 3]
+    assert [r.rid for r in sched.peek_order()] == [0]
+    taken = sched.pop(4, 2.0, footprint=lambda r: len(r.prompt),
+                      budget=20, capacity=50)
+    assert [r.rid for r in taken] == [0]

@@ -54,23 +54,23 @@ def test_continuous_batching_matches_naive(small_lm):
         assert r.out_tokens == _naive_greedy(model, params, p, 4)
 
 
-def test_prefill_ragged_gate_excludes_unsafe_families():
+def test_batched_prefill_gate_excludes_unsafe_families():
     """Right-padded batched prefill must only be offered where padding is
     provably inert: dense full-attention.  MoE pad tokens perturb expert
     routing/capacity; recurrent families fold pads into their state."""
     assert build_model(reduced_config(get_config("granite-8b")),
-                       RCFG).prefill_ragged is not None
+                       RCFG).decode_state.batched_prefill is not None
     for arch in ("grok-1-314b", "llama4-scout-17b-a16e", "rwkv6-1.6b",
                  "zamba2-7b", "whisper-small", "internvl2-1b"):
         assert build_model(reduced_config(get_config(arch)),
-                           RCFG).prefill_ragged is None, arch
+                           RCFG).decode_state.batched_prefill is None, arch
 
 
 def test_bucketed_prefill_matches_per_request(small_lm):
     """Batched padded prefill must be token-for-token identical to the
     seed's one-dispatch-per-request path, in strictly fewer dispatches."""
     model, params = small_lm
-    assert model.prefill_ragged is not None
+    assert model.decode_state.batched_prefill is not None
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, model.cfg.vocab_size, size=4 + (3 * i) % 11)
                for i in range(16)]
@@ -83,7 +83,9 @@ def test_bucketed_prefill_matches_per_request(small_lm):
         return {r.rid: r.out_tokens for r in done}, eng.metrics_snapshot()
 
     toks_bucketed, snap_b = run(model)
-    toks_fallback, snap_f = run(dataclasses.replace(model, prefill_ragged=None))
+    toks_fallback, snap_f = run(dataclasses.replace(
+        model, decode_state=dataclasses.replace(
+            model.decode_state, batched_prefill=None)))
     assert toks_bucketed == toks_fallback
     assert snap_f.prefill_dispatches == 16
     assert snap_b.prefill_dispatches < 16
