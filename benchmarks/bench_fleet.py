@@ -1,0 +1,226 @@
+"""Thermal-aware serving fleet under throttle: §5.2 policies on vs off.
+
+A two-worker heterogeneous fleet (host: ``m2-max-cpu``, phone:
+``iphone-11-pro``) serves the same open-loop traffic twice under the SAME
+synthetic throttle trace (the phone ramps from Minimal to Serious/Critical
+mid-run, paper Fig. 6 shape):
+
+1. **policies off** — thermally-naive capacity routing, no elastic
+   actions: the phone keeps receiving work it can only crawl through.
+2. **policies on** — thermal-aware routing +
+   :class:`repro.runtime.elastic.ServingElasticPolicy`: the hot phone is
+   duty-cycled, drained, and its decode lanes are MIGRATED to the host
+   (token-identically, via the engine's preempt/resume contract).
+
+Asserted (CI-gated via the ``bench-smoke`` job):
+
+* policies recover >= 1.3x goodput (completed tokens per simulated
+  second) vs policies-off under the same trace;
+* at least one request actually migrates, and EVERY request's output —
+  migrated ones included — is token-identical to an unmigrated
+  single-engine run with the same sampling seeds.
+
+A second section re-runs the policies-on fleet with paged +
+content-addressed prefix-cache engines on shared-scaffold traffic: the
+migration re-prefill prefix-matches the scaffold blocks the target worker
+already served, tying the PR 3 cache to fleet mobility.
+
+``--smoke`` is the CI configuration; JSON lands in
+``experiments/bench/fleet.json`` and is uploaded as an artifact.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.hw.specs import get_profile
+from repro.models.api import build_model
+from repro.runtime.elastic import ServingElasticPolicy
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.fleet import (ServingFleet, ThrottleTrace, WorkerSpec,
+                                 drive_sim)
+from repro.serving.sampling import SamplingParams
+
+MAX_LEN = 96
+TICK_S = 0.05
+
+
+def _build():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    rcfg = RunConfig(param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+    model = build_model(cfg, rcfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def _traffic(cfg, n, *, span_s, seed=0, prefix_len=0):
+    """n prompts (optionally sharing a scenario prefix), evenly-spaced
+    arrivals over ``span_s`` sim seconds, and a greedy/stochastic sampling
+    mix with per-request seeds (so any engine reproduces the streams)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    prompts = [np.concatenate([
+        prefix, rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 16)))
+    ]) for _ in range(n)]
+    arrivals = np.linspace(0.0, span_s, n)
+    samplings = [SamplingParams(temperature=2.0, top_k=32, seed=1000 + i)
+                 if i % 3 == 0 else None for i in range(n)]
+    return prompts, arrivals, samplings
+
+
+def _run_fleet(model, params, prompts, arrivals, samplings, max_new, *,
+               policy, thermal_routing, engine_config=None,
+               throttle_start=0.5, max_batch=3):
+    workers = [
+        WorkerSpec("host", get_profile("m2-max-cpu"), max_batch=max_batch),
+        WorkerSpec("phone", get_profile("iphone-11-pro"),
+                   max_batch=max_batch),
+    ]
+    trace = ThrottleTrace({"phone": (throttle_start, 6.0, 0.15)})
+    fleet = ServingFleet(model, params, workers, max_len=MAX_LEN,
+                         tick_s=TICK_S, policy=policy, throttle=trace,
+                         thermal_routing=thermal_routing,
+                         engine_config=engine_config)
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=max_new,
+                                     sampling=samplings[i]))
+    return fleet, fleet.snapshot()
+
+
+def _reference_tokens(model, params, prompts, samplings, max_new):
+    """Unmigrated single-engine run: the token-identity oracle."""
+    ref = ServeEngine(model, params, max_batch=len(prompts), max_len=MAX_LEN)
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=max_new, sampling=sp)
+    return {r.rid: r.out_tokens for r in ref.run_until_drained()}
+
+
+def bench_policies(cfg, model, params, *, smoke: bool):
+    n = 12 if smoke else 28
+    max_new = 16 if smoke else 24
+    span = 1.4 if smoke else 3.0
+    prompts, arrivals, samplings = _traffic(cfg, n, span_s=span)
+
+    f_on, on = _run_fleet(model, params, prompts, arrivals, samplings,
+                          max_new, policy=ServingElasticPolicy(),
+                          thermal_routing=True)
+    f_off, off = _run_fleet(model, params, prompts, arrivals, samplings,
+                            max_new, policy=None, thermal_routing=False)
+    assert on.completed == off.completed == n, \
+        f"fleet dropped work: on={on.completed} off={off.completed} of {n}"
+    ratio = on.goodput_tokens_per_s / off.goodput_tokens_per_s
+    assert on.migrated_requests >= 1, "throttle must force a migration"
+    assert ratio >= 1.3, (
+        f"elastic policies must recover >= 1.3x goodput under throttle, "
+        f"got {ratio:.2f}x ({on.goodput_tokens_per_s:.1f} vs "
+        f"{off.goodput_tokens_per_s:.1f} tok/s)")
+
+    want = _reference_tokens(model, params, prompts, samplings, max_new)
+    got = {rec.req.rid: rec.req.out_tokens for rec in f_on.completed}
+    assert got == want, \
+        "migrated fleet outputs must be token-identical to the unmigrated run"
+
+    phone_on, phone_off = on.per_worker["phone"], off.per_worker["phone"]
+    rows = [
+        ["fleet_policies_on", round(on.sim_t * 1e6, 0),
+         f"goodput={on.goodput_tokens_per_s:.1f}tok/s",
+         f"migrations={on.migrations}", f"drains={on.drains}",
+         f"phone_goodput={phone_on.goodput_tokens_per_s:.1f}",
+         f"phone_occ={phone_on.state_occupancy}"],
+        ["fleet_policies_off", round(off.sim_t * 1e6, 0),
+         f"goodput={off.goodput_tokens_per_s:.1f}tok/s",
+         "migrations=0", "drains=0",
+         f"phone_goodput={phone_off.goodput_tokens_per_s:.1f}",
+         f"phone_occ={phone_off.state_occupancy}"],
+        ["fleet_goodput_ratio", round(ratio, 2),
+         f"migrated_requests={on.migrated_requests}",
+         "token_identical=True"],
+    ]
+    summary = {
+        "goodput_on": on.goodput_tokens_per_s,
+        "goodput_off": off.goodput_tokens_per_s,
+        "goodput_ratio": ratio,
+        "sim_t_on": on.sim_t,
+        "sim_t_off": off.sim_t,
+        "migrations": on.migrations,
+        "migrated_requests": on.migrated_requests,
+        "drains": on.drains,
+        "undrains": on.undrains,
+        "token_identical": got == want,
+        "policies_on": on.as_dict(),
+        "policies_off": off.as_dict(),
+    }
+    return rows, summary
+
+
+def bench_migration_prefix_cache(cfg, model, params, *, smoke: bool):
+    """Policies-on fleet on PAGED + prefix-cached engines with a shared
+    scenario scaffold: the hot phone's migrated lanes re-prefill on the
+    host against scaffold blocks the host already served, so migration
+    cost is a near-full cache hit instead of a cold re-prefill."""
+    n = 12 if smoke else 24
+    max_new = 8
+    prompts, arrivals, samplings = _traffic(
+        cfg, n, span_s=1.4 if smoke else 2.5, seed=3, prefix_len=64)
+    econf = EngineConfig(kv_blocks=30, kv_block_size=16, prefix_cache=True)
+    f, snap = _run_fleet(model, params, prompts, arrivals, samplings,
+                         max_new, policy=ServingElasticPolicy(),
+                         thermal_routing=True, engine_config=econf)
+    assert snap.completed == n, f"dropped work: {snap.completed}/{n}"
+    want = _reference_tokens(model, params, prompts, samplings, max_new)
+    got = {rec.req.rid: rec.req.out_tokens for rec in f.completed}
+    assert got == want, "paged+cached fleet must stay token-identical"
+    hit = sum(w.engine.prefix_hit_tokens for w in snap.per_worker.values())
+    query = sum(w.engine.prefix_query_tokens
+                for w in snap.per_worker.values())
+    hit_rate = hit / query if query else 0.0
+    assert hit_rate > 0.3, (
+        f"shared-scaffold fleet traffic must hit the prefix cache, got "
+        f"{hit_rate:.2f}")
+    rows = [["fleet_migration_prefix_cache", round(snap.sim_t * 1e6, 0),
+             f"hit_rate={hit_rate:.2f}",
+             f"migrations={snap.migrations}",
+             f"prefill_skipped="
+             f"{sum(w.engine.prefill_skipped for w in snap.per_worker.values())}",
+             "token_identical=True"]]
+    summary = {
+        "hit_rate": hit_rate,
+        "migrations": snap.migrations,
+        "migrated_requests": snap.migrated_requests,
+        "completed": snap.completed,
+        "token_identical": got == want,
+    }
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized config")
+    args = ap.parse_args(argv)
+    cfg, model, params = _build()
+    rows, summary = bench_policies(cfg, model, params, smoke=args.smoke)
+    cache_rows, cache_summary = bench_migration_prefix_cache(
+        cfg, model, params, smoke=args.smoke)
+    rows += cache_rows
+    width = max(len(r) for r in rows)
+    rows = [r + [""] * (width - len(r)) for r in rows]
+    emit("fleet", rows,
+         ["name", "us_sim"] + [f"d{i}" for i in range(1, width - 1)])
+    out = OUT_DIR / "fleet.json"
+    out.write_text(json.dumps({
+        "smoke": args.smoke,
+        "rows": [[str(x) for x in r] for r in rows],
+        "policies": summary,
+        "migration_prefix_cache": cache_summary,
+    }, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
-"""Open-loop traffic demo: the serving engine under a synthetic arrival
-process, the way a load balancer would see it.
+"""Thermal-aware fleet demo: heterogeneous serving under a mid-run throttle.
 
-Requests arrive as a Poisson process (open loop: arrivals don't wait for
-the server), with mixed prompt lengths, priorities, per-request sampling
-params, and a deadline on the lowest class.  The engine admits them through
-the chosen policy with bucketed batched prefill, and the structured metrics
-snapshot is printed at the end.
+Two simulated workers — a desktop host (``m2-max-cpu``) and a phone
+(``iphone-11-pro``) — serve Poisson traffic.  Mid-run the phone starts
+thermally throttling (paper §4.2, Fig. 6 ramp); the thermal monitor sees
+its per-step latency creep, and the §5.2 elastic policies react on live
+serving traffic: the phone is duty-cycled, drained (new arrivals route to
+the host) and its decode lanes are MIGRATED — each preempted request
+resumes token-identically on the host.  Every arrival's routing decision,
+every elastic action, and the final per-worker goodput / thermal-state
+occupancy are printed.
 
     PYTHONPATH=src python examples/serve_traffic.py [fcfs|spf|priority]
 """
@@ -20,15 +23,18 @@ import jax
 import numpy as np
 
 from repro.configs import RunConfig, get_config, reduced_config
+from repro.hw.specs import get_profile
 from repro.models.api import build_model
-from repro.serving.engine import ServeEngine
+from repro.runtime.elastic import ServingElasticPolicy
+from repro.serving.fleet import (ServingFleet, ThrottleTrace, WorkerSpec,
+                                 drive_sim)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import SchedulerConfig
-from repro.serving.traffic import drive_open_loop
 
-RATE_RPS = 12.0          # offered load (requests/second)
-N_REQUESTS = 30
-MAX_NEW = 8
+RATE_RPS = 10.0          # offered load (requests per simulated second)
+N_REQUESTS = 16
+MAX_NEW = 12
+THROTTLE_AT_S = 0.6      # phone starts ramping toward 6x slowdown here
 
 
 def main(policy: str = "fcfs"):
@@ -38,48 +44,65 @@ def main(policy: str = "fcfs"):
                      remat=False)
     model = build_model(cfg, rcfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, max_batch=8, max_len=64,
-                         scheduler=SchedulerConfig(policy=policy,
-                                                   max_queue=16))
+
+    workers = [WorkerSpec("host", get_profile("m2-max-cpu"), max_batch=3),
+               WorkerSpec("phone", get_profile("iphone-11-pro"),
+                          max_batch=3)]
+    fleet = ServingFleet(
+        model, params, workers, max_len=64, tick_s=0.05,
+        scheduler=SchedulerConfig(policy=policy, max_queue=16),
+        policy=ServingElasticPolicy(),
+        throttle=ThrottleTrace({"phone": (THROTTLE_AT_S, 6.0, 0.15)}))
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / RATE_RPS, size=N_REQUESTS))
     prompts = [rng.integers(0, cfg.vocab_size,
-                            size=int(rng.integers(4, 32)))
+                            size=int(rng.integers(4, 24)))
                for _ in range(N_REQUESTS)]
-    priorities = rng.integers(0, 3, size=N_REQUESTS)
 
-    # warm the jit caches so the first arrivals measure serving, not compiles
-    engine.submit(prompts[0], max_new=2)
-    engine.run_until_drained()
-    engine.reset_stats()
+    print(f"policy={policy}  offered_load={RATE_RPS:g} req/s (simulated)  "
+          f"n={N_REQUESTS}  workers=host(m2-max-cpu)+phone(iphone-11-pro)  "
+          f"phone throttles 6x from t={THROTTLE_AT_S}s")
 
-    print(f"policy={policy}  offered_load={RATE_RPS:g} req/s  "
-          f"n={N_REQUESTS}  slots={engine.max_batch}")
-
-    def arrive(i: int, now: float) -> None:
-        pr = int(priorities[i])
-        rid = engine.submit(
-            prompts[i], max_new=MAX_NEW, priority=pr,
-            deadline_s=2.0 if pr == 0 else None,
+    def arrive(i: int) -> None:
+        rid = fleet.submit(
+            prompts[i], max_new=MAX_NEW,
             sampling=SamplingParams(temperature=0.7, top_p=0.95, seed=i))
-        state = "queued" if rid is not None else "REJECTED (queue full)"
-        print(f"  t={now:6.2f}s  arrive rid={i:<3d} prio={pr} "
-              f"len={len(prompts[i]):<3d} -> {state}")
+        where = fleet.routed.get(rid, "REJECTED (queues full)") \
+            if rid is not None else "REJECTED (queues full)"
+        print(f"  t={fleet.sim_t:5.2f}s  arrive rid={i:<3d} "
+              f"len={len(prompts[i]):<3d} -> {where}")
 
-    drive_open_loop(engine, arrivals, arrive)
-    snap = engine.metrics_snapshot()
+    drive_sim(fleet, arrivals, arrive)
+
+    print("\nelastic actions (duty_cycle is re-asserted every tick while "
+          "hot; repeats collapsed):")
+    last = {}
+    shown = 0
+    for t, act in fleet.action_log:
+        key = (act.kind, act.worker)
+        if act.kind == "duty_cycle" and last.get(key) == act.detail["duty"]:
+            continue
+        last[key] = act.detail.get("duty")
+        print(f"  t={t:5.2f}s  {act.kind:<10s} worker={act.worker} "
+              f"{act.detail}")
+        shown += 1
+    if not shown:
+        print("  (none — traffic finished before the throttle bit)")
+
+    snap = fleet.snapshot()
     print(f"\ncompleted={snap.completed}  rejected={snap.rejected}  "
-          f"expired={snap.expired}")
-    print(f"ttft   mean={snap.ttft.mean:.3f}s  p50={snap.ttft.p50:.3f}s  "
-          f"p95={snap.ttft.p95:.3f}s")
-    print(f"tpot   mean={snap.tpot.mean * 1e3:.1f}ms/token")
-    print(f"thruput {snap.tokens_per_s:.1f} tok/s over {snap.wall_s:.2f}s  "
-          f"(slot_util={snap.slot_utilization:.0%}, "
-          f"queue_depth_mean={snap.queue_depth_mean:.1f})")
-    print(f"prefill {snap.prefill_requests} requests in "
-          f"{snap.prefill_dispatches} dispatches "
-          f"(x{snap.prefill_batch_mean:.1f} amortisation)")
+          f"expired={snap.expired}  sim_time={snap.sim_t:.2f}s")
+    print(f"fleet goodput {snap.goodput_tokens_per_s:.1f} tok/s (sim)  "
+          f"migrations={snap.migrations} "
+          f"(requests moved: {snap.migrated_requests})  "
+          f"drains={snap.drains} undrains={snap.undrains}")
+    for name, w in snap.per_worker.items():
+        occ = {s: f"{f:.0%}" for s, f in w.state_occupancy.items()}
+        print(f"  {name:<6s} [{w.profile}]  "
+              f"goodput={w.goodput_tokens_per_s:6.1f} tok/s  "
+              f"steps={w.steps_run:<5d} state={w.thermal_state:<8s} "
+              f"occupancy={occ}")
 
 
 if __name__ == "__main__":

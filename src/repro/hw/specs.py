@@ -32,6 +32,23 @@ class DeviceProfile:
     # and the time constant (seconds of saturated compute) to reach it.
     thermal_sustained: float = 1.0
     thermal_tau_s: float = float("inf")
+    # Serving-rate model: sustained rates at thermal MINIMAL (cold), used by
+    # :mod:`repro.serving.fleet` to pace each worker's engine in simulated
+    # time.  ``decode_steps_per_s`` is batched decode steps (one token for
+    # every active lane) per second; ``prefill_tokens_per_s`` is prompt
+    # tokens prefillable per second.  0.0 = derive a flops-proportional
+    # estimate (see :meth:`decode_rate` / :meth:`prefill_rate`).
+    decode_steps_per_s: float = 0.0
+    prefill_tokens_per_s: float = 0.0
+
+    def decode_rate(self) -> float:
+        """Batched decode steps/s (explicit rating, or a flops-scaled
+        estimate calibrated so the paper's phones land near their ratings)."""
+        return self.decode_steps_per_s or self.flops / 1.6e10
+
+    def prefill_rate(self) -> float:
+        """Prefill tokens/s (explicit rating or flops-scaled estimate)."""
+        return self.prefill_tokens_per_s or self.flops / 7.5e7
 
 
 # --- TPU target (the production fleet) -------------------------------------
@@ -45,6 +62,8 @@ TPU_V5E = DeviceProfile(
     dtype="bf16",
     thermal_sustained=0.95,
     thermal_tau_s=600.0,
+    decode_steps_per_s=2000.0,
+    prefill_tokens_per_s=2e6,
 )
 
 # Effective wire efficiency applied to link_bw when converting collective
@@ -55,24 +74,29 @@ ICI_EFFICIENCY = 0.9
 XEON_E3_1225V3 = DeviceProfile(
     name="xeon-e3-1225v3", year=2013, flops=0.061e12, mem_bytes=32e9,
     mem_bw=25.6e9, link_bw=60e6,   # paired with Lightning-era USB2 in the paper
+    decode_steps_per_s=6.0, prefill_tokens_per_s=1500.0,
 )
 IPHONE_11_PRO = DeviceProfile(
     name="iphone-11-pro", year=2019, flops=0.63e12, mem_bytes=2.0e9,
     mem_bw=34e9, link_bw=60e6,     # Lightning: USB 2.0, ~60 MB/s (paper §4.1.2)
     thermal_sustained=0.80, thermal_tau_s=180.0,  # paper Fig. 6: Serious ~batch 17
+    decode_steps_per_s=30.0, prefill_tokens_per_s=8000.0,
 )
 IPHONE_16 = DeviceProfile(
     name="iphone-16", year=2024, flops=1.907e12, mem_bytes=8e9,
     mem_bw=60e9, link_bw=1.25e9,   # USB-C 3.2 Gen 2: 10 Gb/s (paper §4.1.2)
     thermal_sustained=0.85, thermal_tau_s=300.0,
+    decode_steps_per_s=70.0, prefill_tokens_per_s=25000.0,
 )
 M2_MAX_CPU = DeviceProfile(
     name="m2-max-cpu", year=2023, flops=0.9e12, mem_bytes=32e9,
     mem_bw=400e9, link_bw=1.25e9,
+    decode_steps_per_s=45.0, prefill_tokens_per_s=12000.0,
 )
 A18_PRO = DeviceProfile(
     name="a18-pro", year=2024, flops=2.289e12, mem_bytes=8e9,
     mem_bw=60e9, link_bw=1.25e9, thermal_sustained=0.85, thermal_tau_s=300.0,
+    decode_steps_per_s=80.0, prefill_tokens_per_s=30000.0,
 )
 
 PROFILES: Dict[str, DeviceProfile] = {

@@ -16,12 +16,20 @@ fleet:
 
 Policies consume :class:`repro.runtime.monitor.ThermalMonitor` summaries and
 emit Actions; the trainer / simulator executes them.
+
+The same mitigations generalise from trainer stage-swaps to **live serving
+traffic** (consumed by :class:`repro.serving.fleet.ServingFleet`):
+:class:`ServingElasticPolicy` emits ``drain`` (route new admissions away
+from a hot worker), ``migrate`` (preempt its decode lanes token-identically
+and re-admit them on a cooler worker) and ``duty_cycle`` (fewer decode
+steps per fleet tick) actions, with hysteresis: a drained worker is
+re-admitted (``undrain``) only once it cools back to MINIMAL.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence, Set
 
 from repro.core.partition import SplitPlan, split_blocks
 from repro.hw.specs import DeviceProfile
@@ -30,7 +38,9 @@ from repro.runtime.monitor import ThermalMonitor, ThermalState, WorkerStats
 
 @dataclasses.dataclass(frozen=True)
 class Action:
-    kind: str                  # swap | duty_cycle | rebalance | none
+    # trainer kinds: swap | duty_cycle | rebalance | none
+    # serving kinds: drain | undrain | migrate | duty_cycle
+    kind: str
     worker: str = ""
     detail: dict = dataclasses.field(default_factory=dict)
 
@@ -111,3 +121,60 @@ class RebalancePolicy:
                        {"cuts": list(plan.cuts),
                         "prev": list(prev.cuts) if prev else None,
                         "bottleneck_s": plan.bottleneck})]
+
+
+class ServingElasticPolicy:
+    """§5.2 mitigations applied to live serving traffic.
+
+    Consumed by :class:`repro.serving.fleet.ServingFleet`: every fleet tick
+    the policy reads the :class:`ThermalMonitor` and emits
+
+    * ``drain`` when a worker reaches ``drain_at`` — the fleet routes new
+      admissions away from it (its queued backlog still drains through it);
+    * ``migrate`` (edge-triggered, once per hot episode) when it reaches
+      ``migrate_at`` — the fleet preempts its decode lanes (frozen sampler
+      PRNG + generated-token requeue keep the resume token-identical) and
+      re-admits them on the coolest non-drained worker.  With
+      ``migrate_queued`` its queued backlog is re-routed too;
+    * ``duty_cycle`` (delegated to :class:`DutyCyclePolicy`) for every
+      FAIR-or-hotter worker — the fleet runs it for a fraction of each
+      tick, trading throughput for heat;
+    * ``undrain`` once a drained worker cools back to MINIMAL (hysteresis:
+      it must fully recover, not merely dip below ``drain_at``).
+    """
+
+    def __init__(self, drain_at: ThermalState = ThermalState.SERIOUS,
+                 migrate_at: ThermalState = ThermalState.SERIOUS,
+                 duty: Optional[DutyCyclePolicy] = None,
+                 migrate_queued: bool = True):
+        self.drain_at = drain_at
+        self.migrate_at = migrate_at
+        self.duty = duty or DutyCyclePolicy()
+        self.migrate_queued = migrate_queued
+        self.draining: Set[str] = set()
+        self._migrated: Set[str] = set()    # hot episodes already migrated
+
+    def step(self, monitor: ThermalMonitor) -> List[Action]:
+        order = list(ThermalState)
+        actions: List[Action] = []
+        for ws in monitor.workers.values():
+            rank = order.index(ws.state)
+            if rank >= order.index(self.drain_at):
+                if ws.worker not in self.draining:
+                    self.draining.add(ws.worker)
+                    actions.append(Action("drain", ws.worker,
+                                          {"state": ws.state.value}))
+                if (ws.worker not in self._migrated
+                        and rank >= order.index(self.migrate_at)):
+                    self._migrated.add(ws.worker)
+                    actions.append(Action(
+                        "migrate", ws.worker,
+                        {"state": ws.state.value,
+                         "queued": self.migrate_queued}))
+            elif (ws.state == ThermalState.MINIMAL
+                    and ws.worker in self.draining):
+                self.draining.discard(ws.worker)
+                self._migrated.discard(ws.worker)
+                actions.append(Action("undrain", ws.worker))
+        actions.extend(self.duty.step(monitor))
+        return actions

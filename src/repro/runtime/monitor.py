@@ -88,6 +88,21 @@ class ThermalMonitor:
         return [w for w in self.workers.values()
                 if order.index(w.state) >= order.index(min_state)]
 
+    def occupancy(self) -> Dict[str, Dict[str, float]]:
+        """Fraction of observations each worker spent in each thermal state
+        (states never entered are omitted) — the fleet's per-worker
+        thermal-state occupancy metric."""
+        out: Dict[str, Dict[str, float]] = {}
+        for w in self.workers.values():
+            n = len(w.state_history)
+            if not n:
+                out[w.worker] = {}
+                continue
+            out[w.worker] = {
+                s.value: w.state_history.count(s) / n
+                for s in ThermalState if s in w.state_history}
+        return out
+
     def summary(self) -> Dict[str, dict]:
         return {w.worker: {"state": w.state.value,
                            "slowdown": round(w.slowdown, 4),

@@ -49,6 +49,7 @@ Implementations:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, List, Optional, Sequence
 
 import jax
@@ -95,6 +96,98 @@ def _lane_axes(model: Model, n_lanes: int, max_len: int):
     return jax.tree.map(lane_axis, s_a, s_b), s_a
 
 
+# jax.jit caches are PER WRAPPER OBJECT, and a fleet builds one engine per
+# worker from the same model — per-instance wrappers would re-trace and
+# re-compile identical programs once per worker (and once per reference
+# engine in benches).  These caches share one wrapper per key; Model /
+# DecodeState are frozen and hashable, and hold no params, so keeping them
+# alive in the cache is cheap.
+@functools.lru_cache(maxsize=64)
+def _lane_tools(model: Model, n_lanes: int, max_len: int):
+    """Lane-axis map, abstract cache shapes, and the jitted lane
+    paste / extract shared by dense-layout backends of one
+    (model, n_lanes, max_len)."""
+    lane_ax, shapes = _lane_axes(model, n_lanes, max_len)
+
+    def paste(cache, src_cache, src_lane, dst_slot):
+        """Copy lane ``src_lane`` of a prefill cache into decode lane
+        ``dst_slot``.  Lane indices are traced, so every admission
+        reuses one compile per source-batch shape."""
+        def fix(ax, dst, src):
+            if ax < 0:
+                return dst
+            piece = jax.lax.dynamic_index_in_dim(src, src_lane, axis=ax,
+                                                 keepdims=True)
+            idx = tuple(dst_slot if i == ax else 0
+                        for i in range(dst.ndim))
+            return jax.lax.dynamic_update_slice(
+                dst, piece.astype(dst.dtype), idx)
+        return jax.tree.map(fix, lane_ax, cache, src_cache)
+
+    def extract(cache, slot):
+        def fix(ax, leaf):
+            if ax < 0:
+                return leaf
+            return jax.lax.dynamic_index_in_dim(leaf, slot, axis=ax,
+                                                keepdims=True)
+        return jax.tree.map(fix, lane_ax, cache)
+
+    return (lane_ax, shapes, jax.jit(paste, donate_argnums=0),
+            jax.jit(extract))
+
+
+@functools.lru_cache(maxsize=64)
+def _decode_jit(model: Model):
+    return jax.jit(model.decode_step, donate_argnums=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _pool_step_jit(decode_state):
+    return jax.jit(decode_state.pool_step, donate_argnums=1)
+
+
+def _pool_paste(cache, src_layers, src_lane, flat_idx, dst_slot, length):
+    """Scatter lane ``src_lane`` of a prefill cache into a lane's
+    allocated pool blocks.  ``flat_idx`` (width,) maps prefill positions
+    to flattened pool slots; positions past the real context — and
+    positions already covered by SHARED cache blocks, which must never be
+    rewritten — point at the sink."""
+    def fix(pool, src):
+        nl = pool.shape[0]
+        flat = pool.reshape((nl, -1) + pool.shape[3:])
+        piece = jax.lax.dynamic_index_in_dim(
+            src, src_lane, axis=1, keepdims=False)
+        piece = jax.lax.slice_in_dim(
+            piece, 0, flat_idx.shape[0], axis=1)
+        flat = flat.at[:, flat_idx].set(piece.astype(flat.dtype))
+        return flat.reshape(pool.shape)
+    layers = {"k": fix(cache["layers"]["k"], src_layers["k"]),
+              "v": fix(cache["layers"]["v"], src_layers["v"])}
+    pos = cache["pos"].at[dst_slot].set(length)
+    return {"layers": layers, "pos": pos}
+
+
+def _pool_set_pos(cache, slot, val):
+    return {"layers": cache["layers"],
+            "pos": cache["pos"].at[slot].set(val)}
+
+
+def _pool_cow_copy(cache, src, dst):
+    """Duplicate one pool block (all layers, K and V) dst <- src."""
+    def fix(pool):
+        return pool.at[:, dst].set(pool[:, src])
+    return {"layers": {"k": fix(cache["layers"]["k"]),
+                       "v": fix(cache["layers"]["v"])},
+            "pos": cache["pos"]}
+
+
+# pool-layout helpers are model-independent pure functions: one wrapper
+# per process (recompiles per pool shape happen inside jit as usual)
+_POOL_PASTE = jax.jit(_pool_paste, donate_argnums=0)
+_POOL_SET_POS = jax.jit(_pool_set_pos, donate_argnums=0)
+_POOL_COW_COPY = jax.jit(_pool_cow_copy, donate_argnums=0)
+
+
 class CacheBackend:
     """Base class: the dense-lane defaults every layout can fall back on."""
 
@@ -115,6 +208,14 @@ class CacheBackend:
     # bumped whenever capacity/match state changes; footprints computed at
     # one version stay valid while it holds (engine memoizes against it)
     state_version = 0
+
+    def fits(self, n_ctx: int, final_len: int) -> bool:
+        """Could a request with this FINAL footprint ever be admitted
+        here?  The side-effect-free face of ``alloc``'s INFEASIBLE
+        verdict — fleet migration consults it before picking a
+        destination, so a mid-flight request is never moved onto a
+        worker that must reject it."""
+        return True
 
     # capacity the admission scheduler may pack against; None = the lane
     # count is the only bound (footprints are not budget-constrained)
@@ -142,25 +243,9 @@ class DenseBackend(CacheBackend):
         self._span = cache_span(model.cfg, max_len) \
             if model.decode_state.kind != "encdec" else max_len
         self.cache = model.init_cache(n_lanes, max_len)
-        self._lane_ax, _ = _lane_axes(model, n_lanes, max_len)
-        self._decode = jax.jit(model.decode_step, donate_argnums=1)
-
-        def paste(cache, src_cache, src_lane, dst_slot):
-            """Copy lane ``src_lane`` of a prefill cache into decode lane
-            ``dst_slot``.  Lane indices are traced, so every admission
-            reuses one compile per source-batch shape."""
-            def fix(ax, dst, src):
-                if ax < 0:
-                    return dst
-                piece = jax.lax.dynamic_index_in_dim(src, src_lane, axis=ax,
-                                                     keepdims=True)
-                idx = tuple(dst_slot if i == ax else 0
-                            for i in range(dst.ndim))
-                return jax.lax.dynamic_update_slice(
-                    dst, piece.astype(dst.dtype), idx)
-            return jax.tree.map(fix, self._lane_ax, cache, src_cache)
-
-        self._paste = jax.jit(paste, donate_argnums=0)
+        self._lane_ax, _, self._paste, self._extract = _lane_tools(
+            model, n_lanes, max_len)
+        self._decode = _decode_jit(model)
 
     # ------------------------------------------------------------------
     def token_footprint(self, n_ctx: int, max_new: int,
@@ -223,22 +308,13 @@ class RecurrentBackend(DenseBackend):
 
     def __init__(self, model: Model, n_lanes: int, max_len: int):
         super().__init__(model, n_lanes, max_len)
-        # true per-lane state size (elements across all cache leaves)
-        _, shapes = _lane_axes(model, n_lanes, max_len)
+        # true per-lane state size (elements across all cache leaves);
+        # _extract comes shared from _lane_tools via DenseBackend
+        _, shapes, _, _ = _lane_tools(model, n_lanes, max_len)
         sizes = jax.tree.leaves(jax.tree.map(
             lambda ax, s: int(np.prod(s.shape)) // (s.shape[ax] if ax >= 0 else 1)
             if ax >= 0 else 0, self._lane_ax, shapes))
         self.state_units = int(sum(sizes))
-
-        def extract(cache, slot):
-            def fix(ax, leaf):
-                if ax < 0:
-                    return leaf
-                return jax.lax.dynamic_index_in_dim(leaf, slot, axis=ax,
-                                                    keepdims=True)
-            return jax.tree.map(fix, self._lane_ax, cache)
-
-        self._extract = jax.jit(extract)
 
     def token_footprint(self, n_ctx: int, max_new: int,
                         tokens: Optional[Sequence[int]] = None) -> int:
@@ -272,45 +348,10 @@ class PagedBackend(CacheBackend):
             (n_lanes, self.max_blocks_per_lane), np.int32)
         self._lane_blocks: List[List[int]] = [[] for _ in range(n_lanes)]
         self._lane_pos = np.zeros((n_lanes,), np.int64)
-        self._decode = jax.jit(ds.pool_step, donate_argnums=1)
-
-        def paste(cache, src_layers, src_lane, flat_idx, dst_slot, length):
-            """Scatter lane ``src_lane`` of a prefill cache into this
-            lane's allocated pool blocks.  ``flat_idx`` (width,) maps
-            prefill positions to flattened pool slots; positions past the
-            real context — and positions already covered by SHARED cache
-            blocks, which must never be rewritten — point at the sink."""
-            def fix(pool, src):
-                nl = pool.shape[0]
-                flat = pool.reshape((nl, -1) + pool.shape[3:])
-                piece = jax.lax.dynamic_index_in_dim(
-                    src, src_lane, axis=1, keepdims=False)
-                piece = jax.lax.slice_in_dim(
-                    piece, 0, flat_idx.shape[0], axis=1)
-                flat = flat.at[:, flat_idx].set(piece.astype(flat.dtype))
-                return flat.reshape(pool.shape)
-            layers = {"k": fix(cache["layers"]["k"], src_layers["k"]),
-                      "v": fix(cache["layers"]["v"], src_layers["v"])}
-            pos = cache["pos"].at[dst_slot].set(length)
-            return {"layers": layers, "pos": pos}
-
-        self._paste = jax.jit(paste, donate_argnums=0)
-
-        def set_pos(cache, slot, val):
-            return {"layers": cache["layers"],
-                    "pos": cache["pos"].at[slot].set(val)}
-
-        self._set_pos = jax.jit(set_pos, donate_argnums=0)
-
-        def cow_copy(cache, src, dst):
-            """Duplicate one pool block (all layers, K and V) dst <- src."""
-            def fix(pool):
-                return pool.at[:, dst].set(pool[:, src])
-            return {"layers": {"k": fix(cache["layers"]["k"]),
-                               "v": fix(cache["layers"]["v"])},
-                    "pos": cache["pos"]}
-
-        self._cow_copy = jax.jit(cow_copy, donate_argnums=0)
+        self._decode = _pool_step_jit(ds)
+        self._paste = _POOL_PASTE
+        self._set_pos = _POOL_SET_POS
+        self._cow_copy = _POOL_COW_COPY
 
     # -- gauges ---------------------------------------------------------
     @property
@@ -374,9 +415,7 @@ class PagedBackend(CacheBackend):
             need -= sum(1 for b in m.blocks if bm.ref_count(b) > 0)
         return need * bm.block_size
 
-    def alloc(self, n_ctx: int, final_len: int,
-              tokens: Optional[Sequence[int]] = None):
-        bm = self.blocks
+    def fits(self, n_ctx: int, final_len: int) -> bool:
         # feasibility is judged on the FINAL footprint: the context plus
         # every token the request may still generate.  A request admitted
         # on prompt size alone but over-budget at completion would die in
@@ -384,8 +423,15 @@ class PagedBackend(CacheBackend):
         # context than the prefill cache span holds.  Blocks freed by
         # prefix sharing don't relax this bound: COW can re-privatise
         # every shared block before the request completes.
+        bm = self.blocks
         usable = bm.n_blocks - bm.watermark_blocks
-        if final_len > self.max_len or bm.blocks_needed(final_len) > usable:
+        return (final_len <= self.max_len
+                and bm.blocks_needed(final_len) <= usable)
+
+    def alloc(self, n_ctx: int, final_len: int,
+              tokens: Optional[Sequence[int]] = None):
+        bm = self.blocks
+        if not self.fits(n_ctx, final_len):
             return INFEASIBLE
         hits: List[int] = []
         n_cached = n_lookup = 0

@@ -38,11 +38,21 @@ Decoding is per-request :class:`~repro.serving.sampling.SamplingParams`
 :class:`~repro.serving.metrics.MetricsCollector` keeps TTFT / TPOT /
 throughput / utilisation / preemption / block / prefix-cache accounting;
 ``metrics_snapshot()`` returns the structured reading.
+
+The engine is **externally paceable**: it never owns a run loop beyond the
+convenience :meth:`ServeEngine.run_until_drained` — a caller (the fleet)
+decides how many :meth:`ServeEngine.step` calls a worker gets per unit of
+(simulated) time.  Three hooks exist for fleet-level control: ``inject``
+admits an externally-built Request (fleet routing), ``preempt(slot,
+requeue=False)`` releases a lane token-identically and *returns* the
+request instead of requeueing it locally (lane migration), and
+``pull_queued`` empties the local queue (backlog re-routing).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from typing import Any, List, Optional, Sequence, Tuple
@@ -125,6 +135,23 @@ def default_buckets(max_len: int, smallest: int = 16) -> Tuple[int, ...]:
     return tuple(out)
 
 
+@functools.lru_cache(maxsize=64)
+def _shared_prefill_jits(model: Model, max_len: int):
+    """One jitted (single, batched) prefill pair per (model, max_len).
+
+    jax.jit caches are per wrapper object, and a fleet builds one engine
+    per worker from the SAME model — per-instance wrappers would re-trace
+    and re-compile identical prefill programs once per worker.  Model is
+    frozen/hashable and holds no params, so caching it is cheap."""
+    one = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+    batched = model.decode_state.batched_prefill
+    many = None
+    if batched is not None:
+        many = jax.jit(
+            lambda p, toks, lens: batched(p, {"tokens": toks}, lens, max_len))
+    return one, many
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int, max_len: int,
                  eos_id: Optional[int] = None,
@@ -161,15 +188,7 @@ class ServeEngine:
         self.metrics = MetricsCollector(n_slots=max_batch,
                                         n_blocks=self.backend.n_blocks)
 
-        self._prefill1 = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len))
-        batched = model.decode_state.batched_prefill
-        if batched is not None:
-            self._prefill_n = jax.jit(
-                lambda p, toks, lens: batched(
-                    p, {"tokens": toks}, lens, max_len))
-        else:
-            self._prefill_n = None
+        self._prefill1, self._prefill_n = _shared_prefill_jits(model, max_len)
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -188,6 +207,34 @@ class ServeEngine:
         if not self.scheduler.push(req, req.submitted_t):
             return None
         return rid
+
+    def inject(self, req: Request, *, force: bool = False) -> bool:
+        """Admit an externally-built Request (fleet routing / migration).
+
+        ``force`` bypasses ``max_queue`` — a migrated request already owes a
+        client tokens and must never be dropped at the door.  The footprint
+        memo is invalidated: it was computed against another engine's
+        backend state (versions are per-backend and can collide)."""
+        req.fp_memo = None
+        # keep locally-generated rids unique if submit() and inject() mix
+        self._rid = max(self._rid, req.rid + 1)
+        if force:
+            self.scheduler.requeue(req)
+            return True
+        return self.scheduler.push(req, time.perf_counter())
+
+    def pull_queued(self) -> List[Request]:
+        """Remove and return every queued request (fleet-level re-routing
+        of a drained worker's backlog).  Active lanes are untouched."""
+        return self.scheduler.take_all()
+
+    def feasible(self, req: Request) -> bool:
+        """True if this engine's backend could EVER admit the request —
+        the side-effect-free alloc-INFEASIBLE predicate.  Fleet migration
+        checks it before moving a mid-flight request here, because a
+        request that has already produced tokens must never be dropped by
+        the destination's admission control."""
+        return self.backend.fits(self._ctx_len(req), self._final_len(req))
 
     def _prefill_tokens(self, req: Request) -> np.ndarray:
         """Tokens to prefill: the prompt, plus — after a preemption — every
@@ -363,7 +410,7 @@ class ServeEngine:
                     lens[j] = len(seq)
                 logits, group_cache = self._prefill_n(
                     self.params, jnp.asarray(toks), jnp.asarray(lens))
-                self.metrics.on_prefill(len(chunk))
+                self.metrics.on_prefill(len(chunk), blen * len(chunk))
                 slots = [free.pop(0) for _ in chunk]
                 self._admit_group(chunk, slots, logits, group_cache, now,
                                   widths=[blen] * len(chunk))
@@ -373,7 +420,7 @@ class ServeEngine:
             for k, v in req.extra.items():
                 b[k] = jnp.asarray(v[None])
             logits, one_cache = self._prefill1(self.params, b)
-            self.metrics.on_prefill(1)
+            self.metrics.on_prefill(1, self._ctx_len(req))
             self._admit_group([(req, res)], [free.pop(0)], logits, one_cache,
                               now, widths=[self._ctx_len(req)])
 
@@ -409,10 +456,17 @@ class ServeEngine:
                    key=lambda i: (self.slots[i].admitted_t,
                                   self.slots[i].rid))
 
-    def preempt(self, slot: int) -> None:
+    def preempt(self, slot: int, requeue: bool = True) -> Request:
         """Evict the lane: snapshot what the backend can save cheaply,
         release its capacity, and requeue the request (which resumes
-        token-identically — by restore, or by recompute-prefill)."""
+        token-identically — by restore, or by recompute-prefill).
+
+        ``requeue=False`` returns the request WITHOUT putting it back on
+        this engine's queue — the fleet hook for migrating a lane to
+        another worker, where ``inject(req, force=True)`` re-admits it
+        (the frozen sampler PRNG and generated-token requeue travel with
+        the Request, so the resume is token-identical on any engine
+        serving the same model/params)."""
         req = self.slots[slot]
         if req is None:
             raise ValueError(f"lane {slot} is idle: nothing to preempt")
@@ -422,8 +476,10 @@ class ServeEngine:
         self.backend.release(slot, tokens=self._cache_tokens(req))
         self.slots[slot] = None
         self.lane_sampling.clear_lane(slot)
-        self.scheduler.requeue(req)
+        if requeue:
+            self.scheduler.requeue(req)
         self.metrics.on_preempt(req)
+        return req
 
     def _prepare_lanes(self) -> None:
         """Before a decode step, every active lane must have a writable

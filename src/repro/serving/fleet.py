@@ -1,0 +1,578 @@
+"""Thermal-aware heterogeneous serving fleet (paper §4.2 + §5.2, serving).
+
+The paper's core claim is that a weak host plus a thermally-throttled phone
+can serve real workloads; its §5.2 mitigations (swap / duty-cycle /
+rebalance) were implemented for the *training* runtime in
+:mod:`repro.runtime.elastic`.  This module puts the same machinery under
+**live serving traffic**: a :class:`ServingFleet` runs one
+:class:`~repro.serving.engine.ServeEngine` per simulated heterogeneous
+worker, paced in *simulated time* by the worker's
+:class:`~repro.hw.specs.DeviceProfile` serving rates
+(``decode_steps_per_s`` / ``prefill_tokens_per_s``), and
+
+* **routes** each admission to the worker with the coolest thermal state
+  and the shortest estimated backlog (free backend capacity breaks ties);
+* feeds per-step latency telemetry into a
+  :class:`~repro.runtime.monitor.ThermalMonitor` — the paper's EWMA
+  state machine now watches serving steps instead of training batches;
+* executes :class:`~repro.runtime.elastic.ServingElasticPolicy` actions:
+  a SERIOUS worker is **duty-cycled** (fewer decode steps per fleet tick),
+  **drained** (new admissions routed away) or has its lanes **migrated** —
+  ``engine.preempt(slot, requeue=False)`` releases the lane
+  token-identically (frozen sampler PRNG + generated-token requeue) and
+  ``inject(req, force=True)`` re-admits it on a cooler worker.  With
+  content-addressed prefix caching enabled on the target, the migration
+  re-prefill of shared-scaffold traffic is a near-full cache hit.
+
+Simulation semantics: :meth:`ServingFleet.tick` advances simulated time by
+``tick_s``.  A worker earns ``tick_s * duty`` seconds of compute per tick
+and spends it on decode steps (``slowdown / decode_rate`` seconds each)
+and prefill work (``prefilled_tokens * slowdown / prefill_rate``), where
+``slowdown`` comes from a pluggable throttle model:
+
+* :class:`ThrottleTrace` — exogenous per-worker ramp (paper Fig. 6 shape:
+  plateau approach with a time constant), for deterministic benches;
+* :class:`ThermalReservoir` — closed loop: heat integrates utilisation
+  with the profile's ``thermal_tau_s``, idle time dissipates it, and
+  slowdown ramps to ``1 / thermal_sustained`` at full heat — so
+  duty-cycling genuinely cools a worker.
+
+The engines' own latency metrics (TTFT/TPOT) remain wall-clock and are
+meaningless under simulation; fleet-level **goodput** (completed tokens
+per simulated second, total and per worker), migration counts and
+thermal-state occupancy are the numbers to read
+(:meth:`ServingFleet.snapshot`).  Request deadlines are engine-level and
+stay wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.hw.specs import DeviceProfile
+from repro.models.api import Model
+from repro.runtime.elastic import Action, ServingElasticPolicy
+from repro.runtime.monitor import ThermalMonitor, ThermalState
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.metrics import EngineSnapshot
+from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.scheduler import SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# throttle models
+# ---------------------------------------------------------------------------
+class NullThrottle:
+    """No throttling: every worker always runs at its cold rate."""
+
+    def advance(self, worker: str, dt: float, util: float) -> float:
+        return 1.0
+
+
+class ThrottleTrace:
+    """Exogenous per-worker slowdown trace (paper Fig. 6 ramp shape).
+
+    ``ramps`` maps worker name -> ``(start_s, factor, tau_s)``: from
+    ``start_s`` of simulated time the slowdown approaches ``factor`` with
+    time constant ``tau_s``.  Utilisation is ignored — the trace is the
+    same whatever the policies do, which is exactly what a policies-on vs
+    policies-off A/B needs.
+    """
+
+    def __init__(self, ramps: Dict[str, Tuple[float, float, float]]):
+        self.ramps = dict(ramps)
+        self._t: Dict[str, float] = {}
+
+    def advance(self, worker: str, dt: float, util: float) -> float:
+        t = self._t.get(worker, 0.0) + dt
+        self._t[worker] = t
+        if worker not in self.ramps:
+            return 1.0
+        start, factor, tau = self.ramps[worker]
+        if t < start:
+            return 1.0
+        ramp = 1.0 - math.exp(-(t - start) / max(tau, 1e-9))
+        return 1.0 + (factor - 1.0) * ramp
+
+
+class ThermalReservoir:
+    """Closed-loop thermal model driven by the profiles' §4.2 fields.
+
+    Heat ``h`` in [0, 1] integrates utilisation with time constant
+    ``thermal_tau_s`` and dissipates while idle (``cool_frac`` scales the
+    cooling time constant); slowdown ramps to ``1 / thermal_sustained`` at
+    full heat.  Duty-cycling a worker really cools it here — this is the
+    model under which the §5.2 duty-cycle mitigation earns its keep.
+    """
+
+    def __init__(self, profiles: Dict[str, DeviceProfile],
+                 cool_frac: float = 0.5):
+        self.profiles = dict(profiles)
+        self.cool_frac = cool_frac
+        self.heat: Dict[str, float] = {}
+
+    def advance(self, worker: str, dt: float, util: float) -> float:
+        p = self.profiles.get(worker)
+        if p is None or not math.isfinite(p.thermal_tau_s):
+            return 1.0
+        tau = max(p.thermal_tau_s, 1e-9)
+        h = self.heat.get(worker, 0.0)
+        h += dt * (util / tau
+                   - (1.0 - util) * h / (tau * max(self.cool_frac, 1e-9)))
+        h = min(max(h, 0.0), 1.0)
+        self.heat[worker] = h
+        return 1.0 + (1.0 / p.thermal_sustained - 1.0) * h
+
+
+# ---------------------------------------------------------------------------
+# fleet
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """One simulated worker: a device profile plus engine sizing."""
+    name: str
+    profile: DeviceProfile
+    max_batch: int = 4
+    engine_config: Optional[EngineConfig] = None    # None = fleet default
+    scheduler: Optional[SchedulerConfig] = None     # None = fleet default
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletedRecord:
+    """A finished request with fleet-level context."""
+    req: Request
+    worker: str                  # worker it FINISHED on
+    sim_t: float                 # simulated completion time
+    migrated: bool               # ever moved between workers
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSnapshot:
+    name: str
+    profile: str
+    engine: EngineSnapshot
+    completed: int
+    completed_tokens: int
+    goodput_tokens_per_s: float      # tokens finished here / sim seconds
+    steps_run: int
+    duty: float
+    drained: bool
+    thermal_state: str
+    slowdown: float
+    state_occupancy: Dict[str, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSnapshot:
+    sim_t: float
+    ticks: int
+    completed: int
+    completed_tokens: int
+    goodput_tokens_per_s: float      # completed tokens / sim seconds
+    migrations: int                  # lane moves (preempt here, resume there)
+    migrated_requests: int           # unique requests whose decode ever
+    #                                  moved workers (lane moves + queued
+    #                                  mid-flight moves)
+    queue_moves: int                 # queued requests re-routed off a worker
+    drains: int
+    undrains: int
+    rejected: int
+    expired: int
+    per_worker: Dict[str, WorkerSnapshot]
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class _Worker:
+    """Mutable runtime state the fleet keeps per WorkerSpec."""
+
+    def __init__(self, spec: WorkerSpec, engine: ServeEngine):
+        self.spec = spec
+        self.engine = engine
+        self.rate = spec.profile.decode_rate()
+        self.prefill_rate = spec.profile.prefill_rate()
+        self.duty = 1.0
+        self.drained = False
+        self.acc_s = 0.0             # unspent compute credit, seconds
+        self.util = 0.0              # last tick's busy fraction
+        self.slowdown = 1.0
+        self.steps_run = 0
+        self.n_collected = 0         # engine.finished entries already seen
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def free_fraction(self) -> float:
+        """Free capacity in [0, 1]: pool budget fraction for budgeted
+        backends (paged), free-lane fraction otherwise."""
+        eng = self.engine
+        budget = eng.backend.budget_tokens
+        cap = eng.backend.capacity_tokens
+        if budget is not None and cap:
+            return budget / cap
+        return (eng.max_batch - eng.active()) / eng.max_batch
+
+
+class ServingFleet:
+    """One ServeEngine per heterogeneous worker + thermal-aware routing.
+
+    All workers serve the same ``(model, params)`` — the fleet is a replica
+    set, not a pipeline split (that is the next step on the roadmap).  Each
+    engine owns its own cache backend, i.e. its own device memory.
+    """
+
+    def __init__(self, model: Model, params,
+                 workers: Sequence[WorkerSpec], *,
+                 max_len: int = 64,
+                 tick_s: float = 0.05,
+                 monitor: Optional[ThermalMonitor] = None,
+                 policy: Optional[ServingElasticPolicy] = None,
+                 throttle=None,
+                 engine_config: Optional[EngineConfig] = None,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 thermal_routing: bool = True):
+        if not workers:
+            raise ValueError("a fleet needs at least one worker")
+        names = [w.name for w in workers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate worker names: {names}")
+        self.tick_s = tick_s
+        self.monitor = monitor or ThermalMonitor(
+            alpha=0.25, calibration_steps=3, warmup_skip=0)
+        self.policy = policy
+        self.throttle = throttle or NullThrottle()
+        # False = route on capacity/backlog alone (the thermally-naive
+        # baseline a policies-off A/B measures against)
+        self.thermal_routing = thermal_routing
+        self.workers: List[_Worker] = []
+        for spec in workers:
+            eng = ServeEngine(
+                model, params, max_batch=spec.max_batch, max_len=max_len,
+                scheduler=spec.scheduler or scheduler,
+                prefill_buckets=prefill_buckets,
+                config=spec.engine_config or engine_config)
+            self.workers.append(_Worker(spec, eng))
+        self._by_name = {w.name: w for w in self.workers}
+        self.sim_t = 0.0
+        self.ticks = 0
+        self._rid = 0
+        self.completed: List[CompletedRecord] = []
+        self.routed: Dict[int, str] = {}      # rid -> first worker routed to
+        self.action_log: List[Tuple[float, Action]] = []   # (sim_t, action)
+        self.migrations = 0
+        self.queue_moves = 0
+        self.drains = 0
+        self.undrains = 0
+        self.routing_rejected = 0    # no routable worker could queue it
+        self._migrated_rids: Set[int] = set()
+
+    # ------------------------------------------------------------------
+    # admission routing
+    # ------------------------------------------------------------------
+    def worker(self, name: str) -> _Worker:
+        return self._by_name[name]
+
+    def _state_rank(self, name: str) -> int:
+        ws = self.monitor.workers.get(name)
+        order = list(ThermalState)
+        return order.index(ws.state) if ws else 0
+
+    def _route_order(self, exclude: Optional[_Worker] = None) -> List[_Worker]:
+        """Workers best-first: non-drained coolest state, then shortest
+        estimated backlog (queued + active work over the worker's cold
+        rate), then most free backend capacity.  All-drained fleets fall
+        back to every worker — admissions queue rather than vanish."""
+        cands = [w for w in self.workers
+                 if w is not exclude and not w.drained]
+        if not cands:
+            cands = [w for w in self.workers if w is not exclude]
+
+        def score(w: _Worker):
+            backlog = (w.engine.scheduler.depth + w.engine.active()) / w.rate
+            rank = self._state_rank(w.name) if self.thermal_routing else 0
+            return (rank, backlog, -w.free_fraction(), w.name)
+
+        return sorted(cands, key=score)
+
+    def submit(self, prompt, max_new: int = 16,
+               sampling: Optional[SamplingParams] = None, priority: int = 0,
+               deadline_s: Optional[float] = None, **extra) -> Optional[int]:
+        """Route one request to the best worker; returns a fleet-wide rid,
+        or None if every routable worker's queue is full."""
+        rid = self._rid
+        self._rid += 1
+        req = Request(rid, np.asarray(prompt, np.int32), max_new, extra,
+                      submitted_t=time.perf_counter(),
+                      sampling=sampling or GREEDY, priority=priority,
+                      deadline_s=deadline_s)
+        fallback = None
+        for w in self._route_order():
+            # probe capacity BEFORE inject: a push into a full queue would
+            # record a per-engine rejection for a request another worker
+            # then admits (one fleet admission must count at most once)
+            mq = w.engine.scheduler.config.max_queue
+            if mq is not None and w.engine.scheduler.depth >= mq:
+                continue
+            if fallback is None:
+                fallback = w
+            # don't route onto a backend that can never hold the final
+            # footprint while a worker that can is standing by
+            if not w.engine.feasible(req):
+                continue
+            if w.engine.inject(req):
+                self.routed[rid] = w.name
+                return rid
+        if fallback is not None and fallback.engine.inject(req):
+            # no worker fits it: queue it anyway so the backend's alloc —
+            # the authority on infeasibility — records the rejection
+            self.routed[rid] = fallback.name
+            return rid
+        self.routing_rejected += 1
+        return None
+
+    # ------------------------------------------------------------------
+    # simulation
+    # ------------------------------------------------------------------
+    def _collect_finished(self, w: _Worker) -> None:
+        done = w.engine.finished
+        for req in done[w.n_collected:]:
+            self.completed.append(CompletedRecord(
+                req, w.name, self.sim_t, req.rid in self._migrated_rids))
+        w.n_collected = len(done)
+
+    def _advance_worker(self, w: _Worker) -> None:
+        w.slowdown = self.throttle.advance(w.name, self.tick_s, w.util)
+        step_s = w.slowdown / w.rate
+        w.acc_s = min(w.acc_s + self.tick_s * w.duty, self.tick_s + step_s)
+        busy_s = 0.0
+        while w.acc_s >= step_s:
+            if not w.engine.active() and not w.engine.scheduler.depth:
+                # idle: credit does not bank beyond one immediate step
+                w.acc_s = min(w.acc_s, step_s)
+                break
+            tok0 = w.engine.metrics.prefill_tokens
+            w.engine.step()
+            self._collect_finished(w)
+            prefill_s = ((w.engine.metrics.prefill_tokens - tok0)
+                         * w.slowdown / w.prefill_rate)
+            w.acc_s -= step_s + prefill_s
+            busy_s += step_s + prefill_s
+            w.steps_run += 1
+        w.util = min(busy_s / self.tick_s, 1.0)
+        # synthetic telemetry: the per-step latency this worker would have
+        # reported this tick (a real fleet observes each executed step and
+        # probes drained workers to notice recovery)
+        self.monitor.observe(w.name, step_s)
+
+    def tick(self) -> None:
+        """Advance simulated time by ``tick_s``: run every worker's share
+        of decode steps, feed telemetry, then apply policy actions."""
+        self.sim_t += self.tick_s
+        self.ticks += 1
+        for w in self.workers:
+            self._advance_worker(w)
+        if self.policy is not None:
+            actions = self.policy.step(self.monitor)
+            # duty is re-asserted every tick while a worker is hot; a
+            # worker the policy stopped mentioning runs full-duty again
+            asserted = {a.worker for a in actions if a.kind == "duty_cycle"}
+            for w in self.workers:
+                if w.name not in asserted:
+                    w.duty = 1.0
+            self._apply(actions)
+
+    def idle(self) -> bool:
+        return all(not w.engine.active() and not w.engine.scheduler.depth
+                   for w in self.workers)
+
+    def run_until_drained(self, max_ticks: int = 100_000
+                          ) -> List[CompletedRecord]:
+        for _ in range(max_ticks):
+            if self.idle():
+                break
+            self.tick()
+        else:
+            if not self.idle():
+                warnings.warn(
+                    f"fleet run_until_drained exhausted max_ticks="
+                    f"{max_ticks} with work outstanding — returning "
+                    f"PARTIAL results ({len(self.completed)} finished)",
+                    RuntimeWarning, stacklevel=2)
+        return self.completed
+
+    # ------------------------------------------------------------------
+    # elastic actions
+    # ------------------------------------------------------------------
+    def drain(self, name: str) -> None:
+        """Route new admissions away from ``name`` (its queue still drains
+        through it, and its active lanes keep decoding)."""
+        w = self._by_name[name]
+        if not w.drained:
+            w.drained = True
+            self.drains += 1
+
+    def undrain(self, name: str) -> None:
+        w = self._by_name[name]
+        if w.drained:
+            w.drained = False
+            self.undrains += 1
+
+    def migrate(self, name: str, queued: bool = True) -> int:
+        """Move ``name``'s decode lanes (and optionally its queued backlog)
+        to the best other workers.  Token-identity is the engine's
+        preempt/resume contract; the move count is returned.
+
+        A destination must pass ``engine.feasible(req)`` — a mid-flight
+        request moved onto a worker whose backend can never hold its
+        final footprint would be REJECTED there, i.e. silently dropped.
+        Mid-flight requests (tokens already owed to a client) may bypass
+        the destination's ``max_queue``; never-admitted queued backlog
+        may not — admission control survives migration.  A lane with no
+        acceptable destination is NOT preempted: it keeps decoding (and
+        its cache state) on ``name`` rather than paying a re-prefill to
+        go nowhere."""
+        src = self._by_name[name]
+        targets = self._route_order(exclude=src)
+        if not targets or all(t.drained for t in targets):
+            return 0
+
+        def has_room(t: _Worker) -> bool:
+            mq = t.engine.scheduler.config.max_queue
+            return mq is None or t.engine.scheduler.depth < mq
+
+        def dest_for(req, mid_flight: bool) -> Optional[_Worker]:
+            return next(
+                (t for t in self._route_order(exclude=src)
+                 if t.engine.feasible(req) and (mid_flight or has_room(t))),
+                None)
+
+        moved = 0
+        occupied = [i for i, r in enumerate(src.engine.slots)
+                    if r is not None]
+        for slot in occupied:
+            # pick the destination BEFORE preempting: evicting a lane
+            # that has nowhere to go would throw away its cache state
+            # (and pay a re-prefill) just to put it back in line here
+            dst = dest_for(src.engine.slots[slot], mid_flight=True)
+            if dst is None:
+                continue
+            req = src.engine.preempt(slot, requeue=False)
+            dst.engine.inject(req, force=True)
+            self._migrated_rids.add(req.rid)
+            self.migrations += 1
+            moved += 1
+        if queued:
+            stay = []
+            for req in src.engine.pull_queued():
+                mid_flight = req.admitted_t is not None
+                dst = dest_for(req, mid_flight)
+                if dst is None:
+                    stay.append(req)
+                    continue
+                # room/feasibility verified above; force skips the push
+                # path so the probe can't record a spurious rejection
+                dst.engine.inject(req, force=True)
+                if mid_flight:
+                    # a preempted-then-requeued request moved here will
+                    # resume cross-engine: that IS a migration
+                    self._migrated_rids.add(req.rid)
+                self.queue_moves += 1
+                moved += 1
+            for req in stay:
+                src.engine.inject(req, force=True)
+        return moved
+
+    def _apply(self, actions: Sequence[Action]) -> None:
+        for a in actions:
+            if a.worker not in self._by_name:
+                # a shared ThermalMonitor may track non-fleet workers
+                # (another fleet, the training pipeline); not ours to act on
+                continue
+            self.action_log.append((self.sim_t, a))
+            if a.kind == "duty_cycle":
+                self._by_name[a.worker].duty = a.detail["duty"]
+            elif a.kind == "drain":
+                self.drain(a.worker)
+            elif a.kind == "undrain":
+                self.undrain(a.worker)
+            elif a.kind == "migrate":
+                self.migrate(a.worker, queued=a.detail.get("queued", True))
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def snapshot(self) -> FleetSnapshot:
+        occ = self.monitor.occupancy()
+        per_worker: Dict[str, WorkerSnapshot] = {}
+        sim = max(self.sim_t, 1e-12)
+        for w in self.workers:
+            recs = [r for r in self.completed if r.worker == w.name]
+            toks = sum(len(r.req.out_tokens) for r in recs)
+            ws = self.monitor.workers.get(w.name)
+            per_worker[w.name] = WorkerSnapshot(
+                name=w.name,
+                profile=w.spec.profile.name,
+                engine=w.engine.metrics_snapshot(),
+                completed=len(recs),
+                completed_tokens=toks,
+                goodput_tokens_per_s=toks / sim,
+                steps_run=w.steps_run,
+                duty=w.duty,
+                drained=w.drained,
+                thermal_state=(ws.state.value if ws
+                               else ThermalState.MINIMAL.value),
+                slowdown=w.slowdown,
+                state_occupancy=occ.get(w.name, {}),
+            )
+        total_tokens = sum(len(r.req.out_tokens) for r in self.completed)
+        return FleetSnapshot(
+            sim_t=self.sim_t,
+            ticks=self.ticks,
+            completed=len(self.completed),
+            completed_tokens=total_tokens,
+            goodput_tokens_per_s=total_tokens / sim,
+            migrations=self.migrations,
+            migrated_requests=len(self._migrated_rids),
+            queue_moves=self.queue_moves,
+            drains=self.drains,
+            undrains=self.undrains,
+            rejected=self.routing_rejected
+            + sum(w.engine.scheduler.rejected_total for w in self.workers),
+            expired=sum(w.engine.scheduler.expired_total
+                        for w in self.workers),
+            per_worker=per_worker,
+        )
+
+
+def drive_sim(fleet: ServingFleet, arrival_times: Sequence[float],
+              submit, max_ticks: int = 1_000_000) -> float:
+    """Open-loop driving in SIMULATED time: ``submit(i)`` is called when
+    arrival ``i`` comes due on the fleet's sim clock, and the fleet ticks
+    until every arrival is submitted and drained.  The sim-clock analogue
+    of :func:`repro.serving.traffic.drive_open_loop` — shared so benches,
+    demos and tests cannot drift apart on drive semantics.  Returns the
+    simulated seconds elapsed."""
+    t0 = fleet.sim_t
+    n, i = len(arrival_times), 0
+    for _ in range(max_ticks):
+        while i < n and arrival_times[i] <= fleet.sim_t - t0:
+            submit(i)
+            i += 1
+        if i >= n and fleet.idle():
+            break
+        fleet.tick()
+    else:
+        warnings.warn(
+            f"drive_sim exhausted max_ticks={max_ticks} with work "
+            f"outstanding ({len(fleet.completed)} finished)",
+            RuntimeWarning, stacklevel=2)
+    return fleet.sim_t - t0

@@ -69,6 +69,7 @@ class EngineSnapshot:
     prefill_dispatches: int
     prefill_requests: int
     prefill_batch_mean: float          # requests amortised per dispatch
+    prefill_tokens: int                # padded tokens actually prefilled
     # paged-KV accounting (all zero on a dense-layout engine)
     preemptions: int                   # lanes evicted on block exhaustion
     resumes: int                       # preempted requests re-admitted
@@ -107,6 +108,7 @@ class MetricsCollector:
         self.resumes = 0
         self.prefill_dispatches = 0
         self.prefill_requests = 0
+        self.prefill_tokens = 0
         self.prefix_lookups = 0
         self.prefix_hit_tokens = 0
         self.prefix_query_tokens = 0
@@ -116,9 +118,10 @@ class MetricsCollector:
         self._t_last: Optional[float] = None
 
     # ------------------------------------------------------------------
-    def on_prefill(self, n_requests: int) -> None:
+    def on_prefill(self, n_requests: int, n_tokens: int = 0) -> None:
         self.prefill_dispatches += 1
         self.prefill_requests += n_requests
+        self.prefill_tokens += n_tokens
 
     def on_admit(self, req, now: float) -> None:
         self.queue_wait.append(now - req.submitted_t)
@@ -189,6 +192,7 @@ class MetricsCollector:
             prefill_requests=self.prefill_requests,
             prefill_batch_mean=(self.prefill_requests / self.prefill_dispatches
                                 if self.prefill_dispatches else 0.0),
+            prefill_tokens=self.prefill_tokens,
             preemptions=self.preemptions,
             resumes=self.resumes,
             kv_blocks_total=self.n_blocks,

@@ -88,6 +88,12 @@ class AdmissionScheduler:
         of everything that arrived after it."""
         self._queue.append(req)
 
+    def take_all(self) -> List:
+        """Remove and return every queued request (no policy ordering) —
+        the fleet re-routes a drained worker's backlog through it."""
+        taken, self._queue = self._queue, []
+        return taken
+
     def reject(self, req) -> None:
         """Record a request the engine can never run (admission control)."""
         self.rejected.append(req)

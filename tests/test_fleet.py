@@ -1,0 +1,323 @@
+"""Thermal-aware serving fleet: routing, elastic actions, migration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.hw.specs import DeviceProfile
+from repro.models.api import build_model
+from repro.runtime.elastic import Action, ServingElasticPolicy
+from repro.runtime.monitor import ThermalMonitor, ThermalState, WorkerStats
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.fleet import (ServingFleet, ThermalReservoir,
+                                 ThrottleTrace, WorkerSpec, drive_sim)
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import SchedulerConfig
+
+RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    model = build_model(cfg, RCFG)
+    return model, model.init(jax.random.key(0))
+
+
+def _profile(name, rate=20.0, **kw):
+    return DeviceProfile(name=name, year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=rate,
+                         prefill_tokens_per_s=1e9, **kw)
+
+
+def _fleet(model, params, *, rates=(20.0, 20.0), names=("a", "b"),
+           max_batch=2, **kw):
+    workers = [WorkerSpec(n, _profile(f"dev-{n}", r), max_batch=max_batch)
+               for n, r in zip(names, rates)]
+    return ServingFleet(model, params, workers, max_len=48, tick_s=0.05,
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# policy unit behaviour (no engines involved)
+# ---------------------------------------------------------------------------
+def test_serving_elastic_policy_edges_and_hysteresis():
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    pol = ServingElasticPolicy()
+    mon.observe("w", 1.0)                        # calibrates baseline
+    assert pol.step(mon) == []                   # Minimal: nothing to do
+    mon.observe("w", 1.10)                       # >= 1.08 -> Serious
+    kinds = [a.kind for a in pol.step(mon)]
+    assert kinds == ["drain", "migrate", "duty_cycle"]
+    # still hot: drain/migrate are edge-triggered, duty re-asserts
+    assert [a.kind for a in pol.step(mon)] == ["duty_cycle"]
+    mon.observe("w", 1.05)                       # Fair: NOT yet recovered
+    kinds = [a.kind for a in pol.step(mon)]
+    assert "undrain" not in kinds                # hysteresis holds
+    mon.observe("w", 1.0)                        # back to Minimal
+    assert [a.kind for a in pol.step(mon)] == ["undrain"]
+    mon.observe("w", 1.10)                       # relapse: full reaction
+    assert [a.kind for a in pol.step(mon)] == ["drain", "migrate",
+                                               "duty_cycle"]
+
+
+def test_thermal_reservoir_heats_under_load_and_cools_idle():
+    prof = _profile("hot", thermal_sustained=0.5, thermal_tau_s=10.0)
+    res = ThermalReservoir({"hot": prof})
+    s = 1.0
+    for _ in range(100):
+        s = res.advance("hot", 1.0, util=1.0)
+    assert s > 1.8                               # ~2.0 at full heat
+    for _ in range(100):
+        s = res.advance("hot", 1.0, util=0.0)
+    assert s < 1.05                              # idle time dissipates heat
+    assert res.advance("unknown", 1.0, 1.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+def test_fleet_routes_by_backlog_then_state(small_lm):
+    model, params = small_lm
+    fleet = _fleet(model, params)
+    p = np.arange(6, dtype=np.int32)
+    r0 = fleet.submit(p, max_new=2)
+    assert fleet.routed[r0] == "a"               # empty fleet: name tiebreak
+    r1 = fleet.submit(p, max_new=2)
+    assert fleet.routed[r1] == "b"               # a now has backlog
+    # mark b SERIOUS: thermal routing prefers the cooler, busier a
+    fleet.monitor.workers["b"] = WorkerStats(
+        "b", baseline_s=1.0, ewma_s=1.2, state=ThermalState.SERIOUS)
+    r2 = fleet.submit(p, max_new=2)
+    assert fleet.routed[r2] == "a"
+    # thermally-naive routing ignores the state and balances backlog
+    fleet.thermal_routing = False
+    r3 = fleet.submit(p, max_new=2)
+    assert fleet.routed[r3] == "b"
+
+
+def test_fleet_drain_excludes_worker_until_undrained(small_lm):
+    model, params = small_lm
+    fleet = _fleet(model, params)
+    p = np.arange(6, dtype=np.int32)
+    fleet.drain("a")
+    rids = [fleet.submit(p, max_new=2) for _ in range(3)]
+    assert all(fleet.routed[r] == "b" for r in rids)
+    fleet.undrain("a")
+    assert fleet.routed[fleet.submit(p, max_new=2)] == "a"
+    # an all-drained fleet still queues (never silently drops)
+    fleet.drain("a")
+    fleet.drain("b")
+    rid = fleet.submit(p, max_new=2)
+    assert rid is not None and fleet.routed[rid] in ("a", "b")
+    assert fleet.snapshot().drains == 3
+
+
+# ---------------------------------------------------------------------------
+# migration / policies end to end
+# ---------------------------------------------------------------------------
+def test_fleet_migration_is_token_identical(small_lm):
+    model, params = small_lm
+    prompts = [np.asarray(
+        np.random.default_rng(10 + i).integers(
+            0, model.cfg.vocab_size, size=6 + i), np.int32)
+        for i in range(6)]
+    samplings = [SamplingParams(temperature=3.0, top_k=16, seed=50 + i)
+                 if i % 2 else None for i in range(6)]
+
+    fleet = _fleet(model, params, rates=(20.0, 20.0),
+                   policy=ServingElasticPolicy(),
+                   throttle=ThrottleTrace({"b": (0.2, 6.0, 0.1)}))
+    arrivals = np.linspace(0.0, 0.5, len(prompts))
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=8,
+                                     sampling=samplings[i]))
+    snap = fleet.snapshot()
+    assert snap.completed == len(prompts)
+    assert snap.migrated_requests >= 1, "throttled b must shed lanes"
+    assert snap.drains >= 1
+
+    ref = ServeEngine(model, params, max_batch=len(prompts), max_len=48)
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=8, sampling=sp)
+    want = {r.rid: r.out_tokens for r in ref.run_until_drained()}
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == want
+
+    # fleet bookkeeping: migrated requests finish on the cool worker, and
+    # thermal-state occupancy saw the hot episode
+    for rec in fleet.completed:
+        if rec.migrated:
+            assert rec.worker == "a"
+    assert snap.per_worker["b"].state_occupancy.get("Critical", 0.0) > 0.0
+    assert snap.goodput_tokens_per_s > 0.0
+
+
+def test_fleet_deadline_expires_queued_behind_drained_worker(small_lm):
+    model, params = small_lm
+    # b is slower, so the deadline request routes to a's queue; a then
+    # drains (hot) and the queued request expires before ever admitting
+    fleet = _fleet(model, params, rates=(20.0, 10.0), max_batch=1)
+    long_p = np.arange(8, dtype=np.int32)
+    r0 = fleet.submit(long_p, max_new=12)
+    r1 = fleet.submit(long_p, max_new=12)
+    assert fleet.routed[r0] == "a" and fleet.routed[r1] == "b"
+    r2 = fleet.submit(np.arange(5, dtype=np.int32), max_new=2,
+                      deadline_s=1e-6)
+    assert fleet.routed[r2] == "a"               # higher rate: less backlog
+    fleet.drain("a")
+    fleet.run_until_drained(max_ticks=5_000)
+    a_eng = fleet.worker("a").engine
+    assert [r.rid for r in a_eng.scheduler.expired] == [r2]
+    snap = fleet.snapshot()
+    assert snap.expired == 1
+    assert snap.completed == 2
+    assert {rec.req.rid for rec in fleet.completed} == {r0, r1}
+
+
+def test_fleet_migration_skips_infeasible_destination(small_lm):
+    """A mid-flight request must never migrate onto a worker whose
+    backend can't hold its final footprint (it would be REJECTED there,
+    i.e. silently dropped) — it stays and finishes on the hot worker."""
+    model, params = small_lm
+    tiny = EngineConfig(kv_blocks=4, kv_block_size=4)     # 16-token pool
+    workers = [WorkerSpec("a", _profile("da", 20.0), max_batch=2),
+               WorkerSpec("b", _profile("db", 20.0), max_batch=2,
+                          engine_config=tiny)]
+    fleet = ServingFleet(model, params, workers, max_len=48, tick_s=0.05)
+    fleet.drain("b")                         # force both requests onto a
+    p = np.arange(8, dtype=np.int32)
+    rids = [fleet.submit(p, max_new=12) for _ in range(2)]   # final 19 > 16
+    for _ in range(2):
+        fleet.tick()                         # admit into a's lanes
+    fleet.undrain("b")
+    assert fleet.migrate("a") == 0           # b is the only target: unfit
+    fleet.run_until_drained(max_ticks=5_000)
+    snap = fleet.snapshot()
+    assert snap.migrations == 0 and snap.rejected == 0
+    # the lanes were never evicted: no recompute was paid to go nowhere
+    assert snap.per_worker["a"].engine.preemptions == 0
+    assert {rec.req.rid for rec in fleet.completed} == set(rids)
+    assert all(rec.worker == "a" for rec in fleet.completed)
+
+
+def test_fleet_routing_respects_backend_feasibility(small_lm):
+    """submit() must not route a request onto a backend that can never
+    hold its final footprint while a worker that can is standing by —
+    and when NO worker fits, the backend's alloc still records the
+    authoritative rejection instead of the queue hiding it."""
+    model, params = small_lm
+    tiny = EngineConfig(kv_blocks=4, kv_block_size=4)     # 16-token pool
+    workers = [WorkerSpec("a", _profile("da", 20.0), max_batch=2,
+                          engine_config=tiny),
+               WorkerSpec("b", _profile("db", 20.0), max_batch=2)]
+    fleet = ServingFleet(model, params, workers, max_len=48, tick_s=0.05)
+    big, small = np.arange(8, dtype=np.int32), np.arange(4, dtype=np.int32)
+    r_big = fleet.submit(big, max_new=12)    # final 19 > a's 16-token pool
+    assert fleet.routed[r_big] == "b"
+    assert fleet.routed[fleet.submit(small, max_new=2)] == "a"
+
+    both_tiny = [WorkerSpec("a", _profile("da", 20.0), max_batch=2,
+                            engine_config=tiny),
+                 WorkerSpec("b", _profile("db", 20.0), max_batch=2,
+                            engine_config=tiny)]
+    fleet2 = ServingFleet(model, params, both_tiny, max_len=48, tick_s=0.05)
+    rid = fleet2.submit(big, max_new=12)     # fits nowhere
+    assert rid is not None                   # queued on the fallback...
+    fleet2.run_until_drained(max_ticks=100)
+    snap = fleet2.snapshot()
+    assert snap.rejected == 1 and snap.completed == 0   # ...then rejected
+
+
+def test_fleet_rejected_counts_once_across_probed_workers(small_lm):
+    """A submit bounced by every full queue is ONE fleet rejection — not
+    one per probed engine — and an admission that succeeds on the second
+    worker must not leave a rejection record on the first."""
+    model, params = small_lm
+    fleet = _fleet(model, params,
+                   scheduler=SchedulerConfig(policy="fcfs", max_queue=1))
+    p = np.arange(6, dtype=np.int32)
+    r0 = fleet.submit(p, max_new=2)
+    r1 = fleet.submit(p, max_new=2)          # a's queue full: lands on b
+    assert fleet.routed[r0] == "a" and fleet.routed[r1] == "b"
+    assert fleet.submit(p, max_new=2) is None          # both queues full
+    snap = fleet.snapshot()
+    assert snap.rejected == 1
+    assert all(w.engine.scheduler.rejected_total == 0
+               and not w.engine.scheduler.rejected for w in fleet.workers)
+
+
+def test_fleet_migrate_queued_respects_destination_max_queue(small_lm):
+    """Never-admitted queued backlog migrates only into queue room —
+    max_queue is the fleet's overload protection and must survive a
+    migration (mid-flight lanes may still bypass it)."""
+    model, params = small_lm
+    fleet = _fleet(model, params,
+                   scheduler=SchedulerConfig(policy="fcfs", max_queue=2))
+    p = np.arange(6, dtype=np.int32)
+    homes = [fleet.routed[fleet.submit(p, max_new=2)] for _ in range(4)]
+    assert sorted(homes) == ["a", "a", "b", "b"]
+    assert fleet.migrate("a") == 0           # b's queue is already full
+    a_eng, b_eng = fleet.worker("a").engine, fleet.worker("b").engine
+    assert a_eng.scheduler.depth == 2 and b_eng.scheduler.depth == 2
+    assert fleet.snapshot().rejected == 0    # nothing dropped either
+
+
+def test_fleet_migrate_queued_midflight_counts_as_migrated(small_lm):
+    """A preempted-then-requeued request moved via the queue path resumes
+    cross-engine — it must count in migrated_requests just like a lane
+    move (and may bypass the destination's max_queue: tokens are owed)."""
+    model, params = small_lm
+    fleet = _fleet(model, params)
+    rid = fleet.submit(np.arange(6, dtype=np.int32), max_new=4)
+    req = fleet.worker("a").engine.pull_queued()[0]
+    req.admitted_t = 1.0                     # simulate a past preemption
+    req.out_tokens.append(3)
+    fleet.worker("a").engine.inject(req, force=True)
+    assert fleet.migrate("a") == 1
+    snap = fleet.snapshot()
+    assert snap.migrated_requests == 1 and snap.queue_moves == 1
+    assert snap.migrations == 0              # no lane was occupied
+    fleet.run_until_drained(max_ticks=2_000)
+    recs = {rec.req.rid: rec for rec in fleet.completed}
+    assert recs[rid].migrated and recs[rid].worker == "b"
+
+
+def test_fleet_ignores_policy_actions_for_foreign_workers(small_lm):
+    """A shared ThermalMonitor can track non-fleet workers; actions the
+    policy emits for them must be skipped, not KeyError the tick."""
+    model, params = small_lm
+    mon = ThermalMonitor(alpha=1.0, calibration_steps=1, warmup_skip=0)
+    mon.workers["ghost"] = WorkerStats(
+        "ghost", baseline_s=1.0, ewma_s=1.5, state=ThermalState.CRITICAL)
+    fleet = _fleet(model, params, monitor=mon,
+                   policy=ServingElasticPolicy())
+    fleet.submit(np.arange(6, dtype=np.int32), max_new=2)
+    for _ in range(3):
+        fleet.tick()                         # must not raise
+    assert all(a.worker != "ghost" for _, a in fleet.action_log)
+    assert fleet.snapshot().drains == 0
+
+
+def test_fleet_duty_cycle_paces_steps(small_lm):
+    model, params = small_lm
+
+    class HalfDuty:
+        def step(self, monitor):
+            return [Action("duty_cycle", "a", {"duty": 0.5})]
+
+    def steps_after(policy, n_ticks=12):
+        fleet = _fleet(model, params, names=("a",), rates=(40.0,),
+                       policy=policy)
+        for i in range(8):
+            fleet.submit(np.arange(6, dtype=np.int32), max_new=32)
+        for _ in range(n_ticks):
+            fleet.tick()
+        return fleet.worker("a").steps_run
+
+    full, half = steps_after(None), steps_after(HalfDuty())
+    assert full > half >= 1
+    assert half <= 0.7 * full                    # ~0.5 with rounding slack

@@ -1,5 +1,6 @@
 """Continuous batching correctness + tool-loop timeline."""
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -189,6 +190,25 @@ def test_engine_max_new_one_and_eos_on_first_token(small_lm):
     assert len(eng.finished) == 1 and eng.active() == 1
 
 
+def test_run_until_drained_warns_on_max_steps_exhaustion(small_lm):
+    """Exhausting max_steps with work outstanding must raise the PARTIAL
+    RuntimeWarning (with live counts) and still return what finished."""
+    model, params = small_lm
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(model, params, max_batch=1, max_len=48)
+    eng.submit(rng.integers(0, model.cfg.vocab_size, size=5), max_new=2)
+    eng.submit(rng.integers(0, model.cfg.vocab_size, size=5), max_new=20)
+    with pytest.warns(RuntimeWarning, match=r"max_steps=3.*1 active.*0 queued"):
+        done = eng.run_until_drained(max_steps=3)
+    assert len(done) == 1                       # the short request finished
+    assert eng.active() == 1                    # the long one is still live
+    # a clean drain from here must NOT warn again
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        done = eng.run_until_drained()
+    assert len(done) == 2
+
+
 def test_engine_rejects_buckets_beyond_max_len(small_lm):
     model, params = small_lm
     with pytest.raises(ValueError):
@@ -226,5 +246,9 @@ def test_tool_loop_async_removes_idle(small_lm):
                             reason_tokens=6, summary_tokens=8)
     tr_sync = run_scenario(*fresh(), queries, async_tools=False,
                            reason_tokens=6, summary_tokens=8)
+    # sync waits out 3 x 0.25s sequentially; async overlaps them on 3
+    # executor workers, so its floor is ~1/3 of sync (one 0.25s window)
+    # minus whatever decode it hides — 0.5 asserts the overlap without
+    # racing that floor on a noisy shared CPU
     assert tr_sync.time_in("tool_wait") > 0.6
-    assert tr_async.time_in("tool_wait") < 0.3 * tr_sync.time_in("tool_wait")
+    assert tr_async.time_in("tool_wait") < 0.5 * tr_sync.time_in("tool_wait")
