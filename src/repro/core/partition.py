@@ -10,6 +10,12 @@ iPhone 16).  This module makes that choice a cost model:
   Reproduces the paper's split decisions from its own device numbers
   (validated in tests/benchmarks).
 
+* :func:`split_decode` — the SERVING-mode search: decode is sequential per
+  token (token t+1 needs token t), so the objective is the *sum* of stage
+  step times plus boundary-frame transfers, not the pipelined bottleneck —
+  and the binding constraint is each stage fitting its device's
+  ``mem_bytes`` (the whole reason to split a decode model at all).
+
 * :func:`plan_pipeline` — homogeneous-TPU planning for the shard_map
   pipeline: stage count S (divisor of the model-axis), replica factor R,
   layers-per-stage with padding, and the schedule's tick/bubble accounting.
@@ -88,6 +94,101 @@ def single_device_seconds(costs: Sequence[Tuple[float, float]],
                           efficiency: float = 0.5, train: bool = True) -> float:
     fmul = 3.0 if train else 1.0
     return n_micro * _stage_time(sum(c[0] for c in costs) * fmul, dev, efficiency)
+
+
+# ---------------------------------------------------------------------------
+# decode-mode split (serving; paper §4.3 memory wall + §4.1 topology)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSplitPlan:
+    """A serving split: where to cut, what each step costs, what fits where.
+
+    Unlike :class:`SplitPlan` (training, microbatch-pipelined, bottleneck
+    objective), decode steps of one continuous batch are strictly
+    sequential — ``step_seconds`` is the SUM of stage compute plus every
+    boundary-frame flight, i.e. the per-token latency of the split pair.
+    """
+    cuts: Tuple[int, ...]              # block index where each next stage starts
+    stage_seconds: Tuple[float, ...]   # decode-step compute per stage
+    comm_seconds: Tuple[float, ...]    # boundary frame flight after stage i
+    stage_mem_bytes: Tuple[float, ...]
+    fits: Tuple[bool, ...]             # stage_mem <= device.mem_bytes per stage
+
+    @property
+    def step_seconds(self) -> float:
+        return sum(self.stage_seconds) + sum(self.comm_seconds)
+
+    @property
+    def feasible(self) -> bool:
+        return all(self.fits)
+
+    @property
+    def steps_per_s(self) -> float:
+        return 1.0 / self.step_seconds
+
+
+def split_decode(costs: Sequence[Tuple[float, float, float]],
+                 devices: Sequence[DeviceProfile],
+                 stage_fixed_mem: Optional[Sequence[float]] = None
+                 ) -> DecodeSplitPlan:
+    """Exhaustive decode-mode cut search from serving rates + memory.
+
+    costs: per-block ``(share, boundary_bytes, mem_bytes)`` —
+
+    * ``share``: the block's fraction of a FULL-model decode step (shares
+      sum to 1), so a stage holding shares ``s`` on a device rated
+      ``decode_steps_per_s = r`` for the full model costs ``s / r``
+      seconds per token;
+    * ``boundary_bytes``: wire bytes of the activation frame crossing the
+      link if the NEXT stage starts after this block (per decode step);
+    * ``mem_bytes``: resident bytes the block pins on its stage (params +
+      its KV/state share).
+
+    ``stage_fixed_mem[i]`` adds per-stage constants (embedding table on
+    stage 0, final-norm/head on the last, runtime overheads).
+
+    Feasible plans (every stage within its device's ``mem_bytes``) win
+    over infeasible ones; within a class the lowest per-token
+    ``step_seconds`` wins — so when the model fits nowhere whole, the
+    search trades link time for a cut that fits, and when memory is no
+    object it degenerates to "no benefit from splitting" honestly (the
+    unsplit latency is always <= any split's, which callers can check by
+    passing one device).
+    """
+    n = len(costs)
+    s = len(devices)
+    assert 1 <= s <= n
+    fixed = tuple(stage_fixed_mem) if stage_fixed_mem is not None \
+        else (0.0,) * s
+    if len(fixed) != s:
+        raise ValueError(f"stage_fixed_mem has {len(fixed)} entries "
+                         f"for {s} stages")
+
+    best: Optional[DecodeSplitPlan] = None
+    best_key = None
+    for cuts in itertools.combinations(range(1, n), s - 1):
+        bounds = (0,) + cuts + (n,)
+        stage_t, comm_t, mem, fits = [], [], [], []
+        for i in range(s):
+            blocks = costs[bounds[i]:bounds[i + 1]]
+            stage_t.append(sum(c[0] for c in blocks)
+                           / devices[i].decode_rate())
+            m = sum(c[2] for c in blocks) + fixed[i]
+            mem.append(m)
+            fits.append(m <= devices[i].mem_bytes)
+            if i < s - 1:
+                link = min(devices[i].link_bw, devices[i + 1].link_bw)
+                comm_t.append(costs[bounds[i + 1] - 1][1] / link)
+        plan = DecodeSplitPlan(cuts, tuple(stage_t), tuple(comm_t),
+                               tuple(mem), tuple(fits))
+        # feasible first; then fastest per-token step; then the spare
+        # headroom tie-break (prefer the cut leaving the most slack)
+        key = (not plan.feasible, plan.step_seconds,
+               -min(devices[i].mem_bytes - mem[i] for i in range(s)))
+        if best is None or key < best_key:
+            best, best_key = plan, key
+    return best
 
 
 # ---------------------------------------------------------------------------

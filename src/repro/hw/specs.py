@@ -50,6 +50,17 @@ class DeviceProfile:
         """Prefill tokens/s (explicit rating or flops-scaled estimate)."""
         return self.prefill_tokens_per_s or self.flops / 7.5e7
 
+    def derate(self, slowdown: float) -> "DeviceProfile":
+        """This profile at an observed thermal ``slowdown`` (>= 1): compute
+        and serving rates divided by it, memory/link untouched.  Feeding
+        derated profiles back into the partition searches is how online
+        rebalance (§5.2) re-cuts a split as a stage throttles."""
+        s = max(slowdown, 1e-9)
+        return dataclasses.replace(
+            self, flops=self.flops / s,
+            decode_steps_per_s=self.decode_rate() / s,
+            prefill_tokens_per_s=self.prefill_rate() / s)
+
 
 # --- TPU target (the production fleet) -------------------------------------
 TPU_V5E = DeviceProfile(

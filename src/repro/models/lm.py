@@ -228,6 +228,85 @@ def lm_prefill_padded(cfg: ModelConfig, params: dict,
 
 
 # ---------------------------------------------------------------------------
+# stage (layer-range) execution — pipeline-split serving
+# ---------------------------------------------------------------------------
+
+def lm_stage_prefill(cfg: ModelConfig, params: dict,
+                     batch: Dict[str, jax.Array], rcfg: RunConfig,
+                     max_len: int, *, first: bool,
+                     last: bool) -> Tuple[jax.Array, dict]:
+    """Prefill ONE stage of a layer-split model (paper §4.1 topology).
+
+    ``cfg.n_layers`` is the STAGE's layer count and ``params["blocks"]``
+    holds only those layers (see ``repro.models.api.split_stage_params``).
+    The first stage embeds ``batch["tokens"]``; later stages continue the
+    residual stream from ``batch["hidden"]`` — the boundary activation the
+    previous stage shipped.  Non-last stages return the FULL hidden
+    sequence (B, T, D) so the next stage can prefill from it; the last
+    stage returns last-token logits like :func:`lm_prefill`.
+
+    Only wired for families whose layers are self-contained (dense / moe,
+    no shared attention block, no frontend) — ``build_model`` gates
+    eligibility via ``stage_eligible``.
+    """
+    cdt = _dt(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+    from repro.models.attention import cache_span
+
+    if first:
+        x = embed_tokens(params["embed"], batch["tokens"], cdt)
+    else:
+        x = batch["hidden"].astype(cdt)
+    bsz, t = x.shape[:2]
+    span = cache_span(cfg, max_len)
+    positions = jnp.broadcast_to(jnp.arange(t), (bsz, t))
+
+    def body(carry, inp):
+        bp, idx = inp
+        x, cl = B.block_prefill(cfg, bp, carry, idx, positions, span, uk)
+        return x, cl
+
+    fn = jax.checkpoint(body, prevent_cse=False) if rcfg.remat else body
+    x, layer_caches = maybe_scan(fn, x,
+                                 (params["blocks"], jnp.arange(cfg.n_layers)),
+                                 cfg.n_layers, rcfg.unroll_layers)
+    cache = {"layers": layer_caches, "pos": jnp.full((bsz,), t, jnp.int32)}
+    if last:
+        x = rmsnorm(params["final_ln"], x)
+        return x[:, -1] @ head_weight(cfg, params, cdt), cache
+    return x, cache
+
+
+def lm_stage_decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                         x_in: jax.Array, rcfg: RunConfig, *, first: bool,
+                         last: bool) -> Tuple[jax.Array, dict]:
+    """One decode step of ONE stage.  ``x_in`` is tokens (B, 1) int32 on
+    the first stage, the previous stage's boundary activations (B, 1, D)
+    otherwise.  Returns last-token logits on the last stage, the boundary
+    hidden (B, 1, D) to ship onward everywhere else."""
+    cdt = _dt(rcfg.compute_dtype)
+    uk = rcfg.use_kernels
+    x = embed_tokens(params["embed"], x_in, cdt) if first \
+        else x_in.astype(cdt)
+    pos = cache["pos"]
+
+    def body(carry, inp):
+        bp, cl, idx = inp
+        x, ncl = B.block_decode(cfg, bp, carry, cl, pos, idx, uk)
+        return x, ncl
+
+    x, new_layers = maybe_scan(
+        body, x,
+        (params["blocks"], cache["layers"], jnp.arange(cfg.n_layers)),
+        cfg.n_layers, rcfg.unroll_layers)
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    if last:
+        x = rmsnorm(params["final_ln"], x)
+        return x[:, -1] @ head_weight(cfg, params, cdt), new_cache
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 

@@ -146,11 +146,16 @@ class ServingElasticPolicy:
     def __init__(self, drain_at: ThermalState = ThermalState.SERIOUS,
                  migrate_at: ThermalState = ThermalState.SERIOUS,
                  duty: Optional[DutyCyclePolicy] = None,
-                 migrate_queued: bool = True):
+                 migrate_queued: bool = True,
+                 migrate_lanes: Optional[int] = None):
         self.drain_at = drain_at
         self.migrate_at = migrate_at
         self.duty = duty or DutyCyclePolicy()
         self.migrate_queued = migrate_queued
+        # None = evict every lane; an int bounds the eviction to the N
+        # cheapest victims (the fleet orders them by recompute cost and
+        # footprint — see ServingFleet.migrate)
+        self.migrate_lanes = migrate_lanes
         self.draining: Set[str] = set()
         self._migrated: Set[str] = set()    # hot episodes already migrated
 
@@ -170,7 +175,8 @@ class ServingElasticPolicy:
                     actions.append(Action(
                         "migrate", ws.worker,
                         {"state": ws.state.value,
-                         "queued": self.migrate_queued}))
+                         "queued": self.migrate_queued,
+                         "lanes": self.migrate_lanes}))
             elif (ws.state == ThermalState.MINIMAL
                     and ws.worker in self.draining):
                 self.draining.discard(ws.worker)

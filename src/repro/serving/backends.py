@@ -208,6 +208,9 @@ class CacheBackend:
     # bumped whenever capacity/match state changes; footprints computed at
     # one version stay valid while it holds (engine memoizes against it)
     state_version = 0
+    # True where snapshot()/restore() resume WITHOUT recompute (recurrent
+    # state) — cost-aware migration prefers such lanes as victims
+    snapshot_free = False
 
     def fits(self, n_ctx: int, final_len: int) -> bool:
         """Could a request with this FINAL footprint ever be admitted
@@ -305,6 +308,7 @@ class RecurrentBackend(DenseBackend):
     """
 
     name = "recurrent"
+    snapshot_free = True
 
     def __init__(self, model: Model, n_lanes: int, max_len: int):
         super().__init__(model, n_lanes, max_len)

@@ -158,9 +158,15 @@ class ServeEngine:
                  scheduler: Optional[SchedulerConfig] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  max_prefill_batch: int = 8,
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None,
+                 clock=None):
         self.model = model
         self.params = params
+        # the engine's notion of "now" for queue waits, deadlines and
+        # latency stamps.  Standalone engines run on the wall clock; a
+        # simulated fleet passes its SIM clock so Request.deadline_s is
+        # evaluated against simulated seconds, not host wall time
+        self._now = clock or time.perf_counter
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
@@ -201,7 +207,7 @@ class ServeEngine:
         rid = self._rid
         self._rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new, extra,
-                      submitted_t=time.perf_counter(),
+                      submitted_t=self._now(),
                       sampling=sampling or GREEDY, priority=priority,
                       deadline_s=deadline_s)
         if not self.scheduler.push(req, req.submitted_t):
@@ -221,7 +227,7 @@ class ServeEngine:
         if force:
             self.scheduler.requeue(req)
             return True
-        return self.scheduler.push(req, time.perf_counter())
+        return self.scheduler.push(req, self._now())
 
     def pull_queued(self) -> List[Request]:
         """Remove and return every queued request (fleet-level re-routing
@@ -235,6 +241,17 @@ class ServeEngine:
         request that has already produced tokens must never be dropped by
         the destination's admission control."""
         return self.backend.fits(self._ctx_len(req), self._final_len(req))
+
+    def lane_cost(self, slot: int) -> Tuple[int, int]:
+        """(recompute_tokens, footprint) of an active lane — the fleet's
+        cost-aware migration victim ordering.  Backends whose snapshots
+        restore for free (recurrent) cost zero recompute; everything else
+        pays a re-prefill of the lane's full context."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"lane {slot} is idle: no cost to report")
+        recompute = 0 if self.backend.snapshot_free else self._ctx_len(req)
+        return recompute, self._footprint(req)
 
     def _prefill_tokens(self, req: Request) -> np.ndarray:
         """Tokens to prefill: the prompt, plus — after a preemption — every
@@ -305,7 +322,7 @@ class ServeEngine:
                                      jnp.asarray(ls.top_p[idx]),
                                      jnp.asarray(ls.key[idx]))
         toks, new_kd = np.asarray(toks), np.asarray(new_kd)
-        t_first = time.perf_counter()
+        t_first = self._now()
         for j, ((req, res), slot) in enumerate(zip(items, slots)):
             ls.key[slot] = new_kd[j]
             n_ctx = self._ctx_len(req)
@@ -344,7 +361,7 @@ class ServeEngine:
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return False
-        now = time.perf_counter()
+        now = self._now()
         batch = self.scheduler.pop(
             len(free), now, footprint=self._footprint,
             budget=self.backend.budget_tokens,
@@ -533,7 +550,7 @@ class ServeEngine:
                                     jnp.asarray(ls.key))
         ls.key[:] = np.asarray(new_kd)
         nxt = np.asarray(nxt)
-        now = time.perf_counter()
+        now = self._now()
         busy = self.active()          # before the finish-scan frees lanes
         for i, req in enumerate(self.slots):
             if req is None:

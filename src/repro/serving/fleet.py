@@ -37,30 +37,61 @@ and prefill work (``prefilled_tokens * slowdown / prefill_rate``), where
   slowdown ramps to ``1 / thermal_sustained`` at full heat — so
   duty-cycling genuinely cools a worker.
 
-The engines' own latency metrics (TTFT/TPOT) remain wall-clock and are
-meaningless under simulation; fleet-level **goodput** (completed tokens
-per simulated second, total and per worker), migration counts and
-thermal-state occupancy are the numbers to read
-(:meth:`ServingFleet.snapshot`).  Request deadlines are engine-level and
-stay wall-clock.
+Fleet engines run on the fleet's SIM clock (``ServeEngine(clock=...)``):
+``Request.deadline_s`` is evaluated against simulated seconds, and the
+engines' latency metrics read in sim seconds too.  Fleet-level **goodput**
+(completed tokens per simulated second, total and per worker), migration
+counts and thermal-state occupancy remain the headline numbers
+(:meth:`ServingFleet.snapshot`).
+
+Telemetry is paid for, not free: a worker that executed steps this tick
+reports their latency; an idle (usually drained) worker is only observed
+through a paced **probe** (one step's compute charged against its budget,
+every ``probe_every_s`` sim seconds) — so noticing that a drained worker
+cooled down has a cost, as on a real fleet.  ``telemetry="wall"`` feeds
+the monitor the *measured wall-clock* per-step latency of the real jitted
+dispatches instead of the synthetic simulated value — for replica workers
+and for stage-group members alike (per-stage dispatch times) — and probes
+then re-observe the last *measured* value (or skip, before any dispatch
+ran), so the monitor's baseline never mixes wall and sim time scales.
+The bench harness uses this mode to drive the monitor with real
+telemetry.
+
+**Stage groups** (pipeline-split decode, paper §4.1 topology): a
+:class:`StageGroup` pairs two or more member workers into ONE logical
+serving unit running a :class:`~repro.serving.pipeline_decode.PipelineEngine`
+— stage 0 holds the below-the-cut layers (and their KV), stage 1 the
+rest, and every boundary activation crosses as a wire frame charged
+against ``min(link_bw)`` in sim time (a frame that outruns the tick's
+link budget stays IN FLIGHT into the next tick).  The cut comes from
+:func:`repro.core.partition.split_decode`; when a member throttles, the
+elastic ``migrate`` action is reinterpreted for its group as
+**rebalance**: the split is re-cut from the members' derated rates, the
+moved layer params are charged over the link, and every lane resumes
+token-identically through the preempt/inject machinery.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
 import warnings
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
+from repro.core.partition import split_decode
 from repro.hw.specs import DeviceProfile
 from repro.models.api import Model
 from repro.runtime.elastic import Action, ServingElasticPolicy
 from repro.runtime.monitor import ThermalMonitor, ThermalState
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 from repro.serving.metrics import EngineSnapshot
+from repro.serving.pipeline_decode import (PipelineEngine, StepReport,
+                                           decode_block_costs,
+                                           stage_fixed_mem)
 from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import SchedulerConfig
 
@@ -144,6 +175,26 @@ class WorkerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class StageGroup:
+    """Several member workers serving ONE model split across their engines.
+
+    ``workers`` are the stage members in stage order (stage 0 first);
+    ``cuts`` are the layer indices where each next stage starts, or
+    ``None`` to let :func:`repro.core.partition.split_decode` pick them
+    from the members' device profiles (serving rates, link budgets and
+    ``mem_bytes``).  The group routes, drains and migrates as one unit
+    under its ``name``; its members keep their own thermal telemetry,
+    duty cycles and throttle state under their worker names.
+    """
+    name: str
+    workers: Tuple[WorkerSpec, ...]
+    cuts: Optional[Tuple[int, ...]] = None
+    max_batch: int = 4
+    engine_config: Optional[EngineConfig] = None
+    scheduler: Optional[SchedulerConfig] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class CompletedRecord:
     """A finished request with fleet-level context."""
     req: Request
@@ -166,6 +217,28 @@ class WorkerSnapshot:
     thermal_state: str
     slowdown: float
     state_occupancy: Dict[str, float]
+    probes: int = 0                  # paced recovery probes paid
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSnapshot:
+    """One stage group's reading: split shape, wire traffic, members."""
+    name: str
+    workers: Tuple[str, ...]         # member names, stage order
+    cuts: Tuple[int, ...]
+    engine: EngineSnapshot
+    completed: int
+    completed_tokens: int
+    goodput_tokens_per_s: float
+    steps_run: int                   # decode steps fully PAID in sim time
+    drained: bool
+    recuts: int                      # rebalance re-cuts applied
+    frames_sent: int                 # boundary frames through the codec
+    frame_bytes: int                 # activation bytes charged to the link
+    recut_bytes: int                 # layer-param bytes moved by recuts
+    transfer_s: float                # sim seconds the link was busy
+    link_stall_ticks: int            # ticks a frame stayed in flight
+    members: Dict[str, Dict]         # per member: duty/slowdown/state/util
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,30 +258,48 @@ class FleetSnapshot:
     rejected: int
     expired: int
     per_worker: Dict[str, WorkerSnapshot]
+    per_group: Dict[str, GroupSnapshot] = dataclasses.field(
+        default_factory=dict)
+    recuts: int = 0                  # stage-group rebalances applied
+    probes: int = 0                  # paced recovery probes across the fleet
+    transfer_bytes: int = 0          # wire bytes charged (activations+recuts)
+    transfer_s: float = 0.0          # sim seconds links were busy
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
 
-class _Worker:
-    """Mutable runtime state the fleet keeps per WorkerSpec."""
+class _Paced:
+    """Sim-pacing state shared by plain workers and group members."""
 
-    def __init__(self, spec: WorkerSpec, engine: ServeEngine):
+    def __init__(self, spec: WorkerSpec):
         self.spec = spec
-        self.engine = engine
-        self.rate = spec.profile.decode_rate()
-        self.prefill_rate = spec.profile.prefill_rate()
         self.duty = 1.0
-        self.drained = False
         self.acc_s = 0.0             # unspent compute credit, seconds
         self.util = 0.0              # last tick's busy fraction
         self.slowdown = 1.0
         self.steps_run = 0
-        self.n_collected = 0         # engine.finished entries already seen
+        self.next_probe_s = 0.0      # earliest sim time of the next probe
+        self.probes = 0
+        # last MEASURED wall-clock per-step latency (telemetry="wall"):
+        # probes re-observe it so the monitor never mixes time scales
+        self.last_wall_step_s: Optional[float] = None
 
     @property
     def name(self) -> str:
         return self.spec.name
+
+
+class _Worker(_Paced):
+    """Mutable runtime state the fleet keeps per replica WorkerSpec."""
+
+    def __init__(self, spec: WorkerSpec, engine: ServeEngine):
+        super().__init__(spec)
+        self.engine = engine
+        self.rate = spec.profile.decode_rate()
+        self.prefill_rate = spec.profile.prefill_rate()
+        self.drained = False
+        self.n_collected = 0         # engine.finished entries already seen
 
     def free_fraction(self) -> float:
         """Free capacity in [0, 1]: pool budget fraction for budgeted
@@ -221,16 +312,91 @@ class _Worker:
         return (eng.max_batch - eng.active()) / eng.max_batch
 
 
-class ServingFleet:
-    """One ServeEngine per heterogeneous worker + thermal-aware routing.
+@dataclasses.dataclass
+class _Charge:
+    """One unpaid cost of a stage group's in-flight work.
 
-    All workers serve the same ``(model, params)`` — the fleet is a replica
-    set, not a pipeline split (that is the next step on the roadmap).  Each
-    engine owns its own cache backend, i.e. its own device memory.
+    ``kind`` is ``"stage"`` (compute on member ``idx``, remaining COLD
+    seconds — the member's live slowdown scales it at payment time),
+    ``"link"`` (remaining wire seconds on boundary ``idx``; a partially
+    paid link charge IS an activation frame in flight between ticks) or
+    ``"commit"`` (free: the step's results become visible — finished
+    requests are collected at the sim time the costs finished)."""
+    kind: str
+    idx: int
+    remaining: float
+
+
+class _GroupRuntime:
+    """Runtime state of one StageGroup: engine, members, charge queue."""
+
+    def __init__(self, spec: StageGroup, engine: PipelineEngine,
+                 members: List[_Paced], costs, fixed_mem):
+        self.spec = spec
+        self.engine = engine
+        self.members = members
+        self.costs = costs               # decode_block_costs at build time
+        self.fixed_mem = fixed_mem
+        self.drained = False
+        self.n_collected = 0
+        self.steps_run = 0
+        self.pending: Deque[_Charge] = collections.deque()
+        self.link_acc = 0.0              # unspent link time, seconds
+        self.transfer_s = 0.0            # sim seconds spent on the wire
+        self.frame_bytes = 0             # activation bytes charged
+        self.recut_bytes = 0             # layer-param bytes moved by recuts
+        self.link_stall_ticks = 0        # ticks a frame stayed in flight
+        self.recuts = 0
+        self._set_rates()
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def _set_rates(self) -> None:
+        """Per-stage cold costs from the CURRENT cut (recomputed after a
+        rebalance): a stage holding ``share`` of the layers costs
+        ``share / decode_rate`` cold seconds per decode step and
+        ``share / prefill_rate`` per prefill token on its member."""
+        n = self.engine.model.cfg.n_layers
+        bounds = (0,) + self.engine.cuts + (n,)
+        devs = [m.spec.profile for m in self.members]
+        self.step_cold = [(bounds[i + 1] - bounds[i]) / n
+                          / devs[i].decode_rate()
+                          for i in range(len(self.members))]
+        self.prefill_cold = [(bounds[i + 1] - bounds[i]) / n
+                             / devs[i].prefill_rate()
+                             for i in range(len(self.members))]
+        self.link_bw = [min(devs[i].link_bw, devs[i + 1].link_bw)
+                        for i in range(len(self.members) - 1)]
+        self.rate = 1.0 / sum(self.step_cold)    # cold steps/s (routing)
+
+    def free_fraction(self) -> float:
+        eng = self.engine
+        return (eng.max_batch - eng.active()) / eng.max_batch
+
+    def busy(self) -> bool:
+        return bool(self.pending) or self.engine.active() > 0 \
+            or self.engine.scheduler.depth > 0
+
+
+_Routable = Union[_Worker, _GroupRuntime]
+
+
+class ServingFleet:
+    """Heterogeneous serving fleet: replica workers + stage groups.
+
+    Replica workers each run a full-params :class:`ServeEngine`; stage
+    groups run ONE model split across their members' engines
+    (:class:`~repro.serving.pipeline_decode.PipelineEngine`), which is
+    what lets the fleet serve models larger than any single worker's
+    ``mem_bytes``.  Both route, drain and migrate as units under their
+    names.
     """
 
     def __init__(self, model: Model, params,
-                 workers: Sequence[WorkerSpec], *,
+                 workers: Sequence[WorkerSpec] = (), *,
+                 groups: Sequence[StageGroup] = (),
                  max_len: int = 64,
                  tick_s: float = 0.05,
                  monitor: Optional[ThermalMonitor] = None,
@@ -239,12 +405,18 @@ class ServingFleet:
                  engine_config: Optional[EngineConfig] = None,
                  scheduler: Optional[SchedulerConfig] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 thermal_routing: bool = True):
-        if not workers:
-            raise ValueError("a fleet needs at least one worker")
-        names = [w.name for w in workers]
+                 thermal_routing: bool = True,
+                 telemetry: str = "sim",
+                 probe_every_s: float = 0.25):
+        if not workers and not groups:
+            raise ValueError("a fleet needs at least one worker or group")
+        names = ([w.name for w in workers] + [g.name for g in groups]
+                 + [m.name for g in groups for m in g.workers])
         if len(set(names)) != len(names):
-            raise ValueError(f"duplicate worker names: {names}")
+            raise ValueError(f"duplicate worker/group names: {names}")
+        if telemetry not in ("sim", "wall"):
+            raise ValueError(f"telemetry must be 'sim' or 'wall', "
+                             f"got {telemetry!r}")
         self.tick_s = tick_s
         self.monitor = monitor or ThermalMonitor(
             alpha=0.25, calibration_steps=3, warmup_skip=0)
@@ -253,53 +425,105 @@ class ServingFleet:
         # False = route on capacity/backlog alone (the thermally-naive
         # baseline a policies-off A/B measures against)
         self.thermal_routing = thermal_routing
+        self.telemetry = telemetry
+        self.probe_every_s = probe_every_s
         self.workers: List[_Worker] = []
         for spec in workers:
             eng = ServeEngine(
                 model, params, max_batch=spec.max_batch, max_len=max_len,
                 scheduler=spec.scheduler or scheduler,
                 prefill_buckets=prefill_buckets,
-                config=spec.engine_config or engine_config)
+                config=spec.engine_config or engine_config,
+                clock=self._sim_now)
             self.workers.append(_Worker(spec, eng))
-        self._by_name = {w.name: w for w in self.workers}
+        self.groups: List[_GroupRuntime] = []
+        self._member_group: Dict[str, _GroupRuntime] = {}
+        for gspec in groups:
+            g = self._build_group(model, params, gspec, max_len, scheduler)
+            self.groups.append(g)
+            for m in g.members:
+                self._member_group[m.name] = g
+        self._by_name: Dict[str, _Routable] = {
+            u.name: u for u in (*self.workers, *self.groups)}
         self.sim_t = 0.0
         self.ticks = 0
         self._rid = 0
         self.completed: List[CompletedRecord] = []
-        self.routed: Dict[int, str] = {}      # rid -> first worker routed to
+        self.routed: Dict[int, str] = {}      # rid -> first unit routed to
         self.action_log: List[Tuple[float, Action]] = []   # (sim_t, action)
         self.migrations = 0
         self.queue_moves = 0
         self.drains = 0
         self.undrains = 0
+        self.recuts = 0
         self.routing_rejected = 0    # no routable worker could queue it
         self._migrated_rids: Set[int] = set()
+
+    def _sim_now(self) -> float:
+        """The fleet's engines live on this SIM clock: queue waits and
+        deadlines are simulated seconds, not host wall time."""
+        return self.sim_t
+
+    def _build_group(self, model: Model, params, gspec: StageGroup,
+                     max_len: int,
+                     scheduler: Optional[SchedulerConfig]) -> _GroupRuntime:
+        if len(gspec.workers) < 2:
+            raise ValueError(f"stage group {gspec.name!r} needs >= 2 "
+                             f"member workers")
+        costs = decode_block_costs(model, params, gspec.max_batch, max_len)
+        fixed = stage_fixed_mem(model, params, len(gspec.workers))
+        cuts = gspec.cuts
+        if cuts is None:
+            plan = split_decode(costs, [w.profile for w in gspec.workers],
+                                stage_fixed_mem=fixed)
+            cuts = plan.cuts
+        eng = PipelineEngine(model, params, max_batch=gspec.max_batch,
+                             max_len=max_len, cuts=cuts,
+                             scheduler=gspec.scheduler or scheduler,
+                             config=gspec.engine_config,
+                             clock=self._sim_now)
+        members = [_Paced(w) for w in gspec.workers]
+        return _GroupRuntime(gspec, eng, members, costs, fixed)
 
     # ------------------------------------------------------------------
     # admission routing
     # ------------------------------------------------------------------
-    def worker(self, name: str) -> _Worker:
+    def worker(self, name: str) -> _Routable:
         return self._by_name[name]
+
+    def group(self, name: str) -> _GroupRuntime:
+        u = self._by_name[name]
+        if not isinstance(u, _GroupRuntime):
+            raise KeyError(f"{name!r} is not a stage group")
+        return u
 
     def _state_rank(self, name: str) -> int:
         ws = self.monitor.workers.get(name)
         order = list(ThermalState)
         return order.index(ws.state) if ws else 0
 
-    def _route_order(self, exclude: Optional[_Worker] = None) -> List[_Worker]:
-        """Workers best-first: non-drained coolest state, then shortest
-        estimated backlog (queued + active work over the worker's cold
-        rate), then most free backend capacity.  All-drained fleets fall
-        back to every worker — admissions queue rather than vanish."""
-        cands = [w for w in self.workers
-                 if w is not exclude and not w.drained]
-        if not cands:
-            cands = [w for w in self.workers if w is not exclude]
+    def _unit_rank(self, u: _Routable) -> int:
+        """A group is as hot as its hottest member: one throttled stage
+        throttles every lane spanning it."""
+        if isinstance(u, _GroupRuntime):
+            return max(self._state_rank(m.name) for m in u.members)
+        return self._state_rank(u.name)
 
-        def score(w: _Worker):
-            backlog = (w.engine.scheduler.depth + w.engine.active()) / w.rate
-            rank = self._state_rank(w.name) if self.thermal_routing else 0
-            return (rank, backlog, -w.free_fraction(), w.name)
+    def _route_order(self, exclude: Optional[_Routable] = None
+                     ) -> List[_Routable]:
+        """Routable units best-first: non-drained coolest state, then
+        shortest estimated backlog (queued + active work over the unit's
+        cold rate), then most free backend capacity.  All-drained fleets
+        fall back to every unit — admissions queue rather than vanish."""
+        units: List[_Routable] = [*self.workers, *self.groups]
+        cands = [u for u in units if u is not exclude and not u.drained]
+        if not cands:
+            cands = [u for u in units if u is not exclude]
+
+        def score(u: _Routable):
+            backlog = (u.engine.scheduler.depth + u.engine.active()) / u.rate
+            rank = self._unit_rank(u) if self.thermal_routing else 0
+            return (rank, backlog, -u.free_fraction(), u.name)
 
         return sorted(cands, key=score)
 
@@ -311,7 +535,7 @@ class ServingFleet:
         rid = self._rid
         self._rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new, extra,
-                      submitted_t=time.perf_counter(),
+                      submitted_t=self.sim_t,
                       sampling=sampling or GREEDY, priority=priority,
                       deadline_s=deadline_s)
         fallback = None
@@ -342,57 +566,194 @@ class ServingFleet:
     # ------------------------------------------------------------------
     # simulation
     # ------------------------------------------------------------------
-    def _collect_finished(self, w: _Worker) -> None:
-        done = w.engine.finished
-        for req in done[w.n_collected:]:
+    def _collect_finished(self, u: _Routable) -> None:
+        done = u.engine.finished
+        for req in done[u.n_collected:]:
             self.completed.append(CompletedRecord(
-                req, w.name, self.sim_t, req.rid in self._migrated_rids))
-        w.n_collected = len(done)
+                req, u.name, self.sim_t, req.rid in self._migrated_rids))
+        u.n_collected = len(done)
+
+    def _observe_or_probe(self, p: _Paced, ran: bool,
+                          reading: Optional[float],
+                          probe_cost: float) -> float:
+        """Telemetry with a cost model: a worker that executed work this
+        tick reports its step latency for free (the steps themselves were
+        the observation).  An idle worker — drained, starved or stalled —
+        is only observed through a paced PROBE every ``probe_every_s``
+        sim seconds; the probe costs one step's compute (returned, so the
+        caller charges it), because on a real fleet noticing that a
+        drained phone cooled down means running something on it.
+
+        ``reading`` is the latency to feed the monitor — the simulated
+        step time, or under ``telemetry="wall"`` the measured wall value
+        (a probe re-observes the LAST measured one, never a sim-scale
+        stand-in: the monitor's baseline must stay on one time scale).
+        ``None`` = no reading exists yet (wall mode before any dispatch
+        ran): the observation is skipped rather than polluted."""
+        if ran:
+            if reading is not None:
+                self.monitor.observe(p.name, reading)
+            p.next_probe_s = self.sim_t + self.probe_every_s
+            return 0.0
+        if self.sim_t >= p.next_probe_s:
+            p.next_probe_s = self.sim_t + self.probe_every_s
+            if reading is None:
+                return 0.0
+            p.probes += 1
+            self.monitor.observe(p.name, reading)
+            return probe_cost
+        return 0.0
 
     def _advance_worker(self, w: _Worker) -> None:
         w.slowdown = self.throttle.advance(w.name, self.tick_s, w.util)
         step_s = w.slowdown / w.rate
         w.acc_s = min(w.acc_s + self.tick_s * w.duty, self.tick_s + step_s)
         busy_s = 0.0
+        wall_s = 0.0
+        steps_ran = 0
         while w.acc_s >= step_s:
             if not w.engine.active() and not w.engine.scheduler.depth:
                 # idle: credit does not bank beyond one immediate step
                 w.acc_s = min(w.acc_s, step_s)
                 break
             tok0 = w.engine.metrics.prefill_tokens
+            t0 = time.perf_counter()
             w.engine.step()
+            wall_s += time.perf_counter() - t0
             self._collect_finished(w)
             prefill_s = ((w.engine.metrics.prefill_tokens - tok0)
                          * w.slowdown / w.prefill_rate)
             w.acc_s -= step_s + prefill_s
             busy_s += step_s + prefill_s
             w.steps_run += 1
+            steps_ran += 1
+        # telemetry: the simulated per-step latency, or — under
+        # telemetry="wall" — the MEASURED wall time of the real jitted
+        # dispatches (the bench harness's real-telemetry feed); probes
+        # re-observe the last measured value so scales never mix
+        if self.telemetry == "wall":
+            if steps_ran:
+                w.last_wall_step_s = wall_s / steps_ran
+            reading = w.last_wall_step_s
+        else:
+            reading = step_s
+        busy_s += self._observe_or_probe(w, steps_ran > 0, reading, step_s)
         w.util = min(busy_s / self.tick_s, 1.0)
-        # synthetic telemetry: the per-step latency this worker would have
-        # reported this tick (a real fleet observes each executed step and
-        # probes drained workers to notice recovery)
-        self.monitor.observe(w.name, step_s)
+
+    # -- stage groups ---------------------------------------------------
+    def _charges_for(self, g: _GroupRuntime,
+                     rep: StepReport) -> List[_Charge]:
+        """Turn one eagerly-executed engine step into its sim-time costs,
+        in pipeline order: per-stage prefill compute with the prompt
+        activation frames between them, then per-stage decode compute
+        with the decode boundary frames, then the free commit marker."""
+        out: List[_Charge] = []
+        n = len(g.members)
+        if rep.prefill_tokens:
+            for i in range(n):
+                out.append(_Charge(
+                    "stage", i, rep.prefill_tokens * g.prefill_cold[i]))
+                if i < n - 1 and rep.prefill_frame_bytes[i]:
+                    nb = rep.prefill_frame_bytes[i]
+                    g.frame_bytes += nb
+                    out.append(_Charge("link", i, nb / g.link_bw[i]))
+        if rep.decode_step:
+            for i in range(n):
+                out.append(_Charge("stage", i, g.step_cold[i]))
+                # wall telemetry feed: the measured per-stage dispatch time
+                g.members[i].last_wall_step_s = rep.decode_stage_wall_s[i]
+                if i < n - 1:
+                    nb = rep.decode_frame_bytes[i]
+                    g.frame_bytes += nb
+                    out.append(_Charge("link", i, nb / g.link_bw[i]))
+        out.append(_Charge("commit", 0, 0.0))
+        return out
+
+    def _advance_group(self, g: _GroupRuntime) -> None:
+        """One tick of a stage group: members earn compute credit, the
+        link earns wire time, and the charge queue drains in order — a
+        decode step's stage-0 compute, its activation frame's flight, its
+        stage-1 compute.  A frame whose flight outruns the tick's link
+        budget stays IN FLIGHT into the next tick (that is the
+        "activations cross between fleet ticks" semantics); compute that
+        outruns a member's budget stalls the pipeline the same way."""
+        n = len(g.members)
+        for m in g.members:
+            m.slowdown = self.throttle.advance(m.name, self.tick_s, m.util)
+            m.acc_s = min(m.acc_s + self.tick_s * m.duty, self.tick_s)
+        g.link_acc = min(g.link_acc + self.tick_s, self.tick_s)
+        busy = [0.0] * n
+        ran = [0] * n
+        while True:
+            if g.pending:
+                ch = g.pending[0]
+                if ch.kind == "stage":
+                    m = g.members[ch.idx]
+                    cost_now = ch.remaining * m.slowdown
+                    pay = min(cost_now, m.acc_s)
+                    m.acc_s -= pay
+                    busy[ch.idx] += pay
+                    ch.remaining -= pay / m.slowdown if m.slowdown else pay
+                    if ch.remaining > 1e-12:
+                        break                    # stage stalls into next tick
+                    g.pending.popleft()
+                    m.steps_run += 1
+                    ran[ch.idx] += 1
+                elif ch.kind == "link":
+                    pay = min(ch.remaining, g.link_acc)
+                    g.link_acc -= pay
+                    g.transfer_s += pay
+                    ch.remaining -= pay
+                    if ch.remaining > 1e-12:
+                        g.link_stall_ticks += 1  # frame crosses the tick
+                        break
+                    g.pending.popleft()
+                else:                            # commit: results visible
+                    g.pending.popleft()
+                    g.steps_run += 1
+                    self._collect_finished(g)
+                continue
+            if not (g.engine.active() or g.engine.scheduler.depth):
+                break
+            if all(m.acc_s <= 1e-12 for m in g.members):
+                break                            # no stage could even start
+            rep = g.engine.step_paced()
+            if rep is None:
+                break
+            g.pending.extend(self._charges_for(g, rep))
+        for i, m in enumerate(g.members):
+            sim_step = g.step_cold[i] * m.slowdown
+            reading = m.last_wall_step_s if self.telemetry == "wall" \
+                else sim_step
+            busy[i] += self._observe_or_probe(m, ran[i] > 0, reading,
+                                              sim_step)
+            m.util = min(busy[i] / self.tick_s, 1.0)
 
     def tick(self) -> None:
-        """Advance simulated time by ``tick_s``: run every worker's share
-        of decode steps, feed telemetry, then apply policy actions."""
+        """Advance simulated time by ``tick_s``: run every worker's and
+        group's share of work, feed telemetry, then apply policy
+        actions."""
         self.sim_t += self.tick_s
         self.ticks += 1
         for w in self.workers:
             self._advance_worker(w)
+        for g in self.groups:
+            self._advance_group(g)
         if self.policy is not None:
             actions = self.policy.step(self.monitor)
             # duty is re-asserted every tick while a worker is hot; a
             # worker the policy stopped mentioning runs full-duty again
             asserted = {a.worker for a in actions if a.kind == "duty_cycle"}
-            for w in self.workers:
-                if w.name not in asserted:
-                    w.duty = 1.0
+            for p in (*self.workers,
+                      *(m for g in self.groups for m in g.members)):
+                if p.name not in asserted:
+                    p.duty = 1.0
             self._apply(actions)
 
     def idle(self) -> bool:
-        return all(not w.engine.active() and not w.engine.scheduler.depth
-                   for w in self.workers)
+        return (all(not w.engine.active() and not w.engine.scheduler.depth
+                    for w in self.workers)
+                and all(not g.busy() for g in self.groups))
 
     def run_until_drained(self, max_ticks: int = 100_000
                           ) -> List[CompletedRecord]:
@@ -426,10 +787,19 @@ class ServingFleet:
             w.drained = False
             self.undrains += 1
 
-    def migrate(self, name: str, queued: bool = True) -> int:
+    def migrate(self, name: str, queued: bool = True,
+                lanes: Optional[int] = None) -> int:
         """Move ``name``'s decode lanes (and optionally its queued backlog)
         to the best other workers.  Token-identity is the engine's
         preempt/resume contract; the move count is returned.
+
+        Victim choice is COST-AWARE: lanes are moved cheapest-first by
+        ``engine.lane_cost(slot)`` — zero recompute (snapshot-restoring
+        backends) before recompute, less re-prefill work before more, and
+        the larger memory footprint first within a class (moving it
+        relieves the hot worker most per recompute token paid).
+        ``lanes`` bounds how many lanes move (None = all) — the policy's
+        partial-migration knob, instead of always evicting everything.
 
         A destination must pass ``engine.feasible(req)`` — a mid-flight
         request moved onto a worker whose backend can never hold its
@@ -445,19 +815,22 @@ class ServingFleet:
         if not targets or all(t.drained for t in targets):
             return 0
 
-        def has_room(t: _Worker) -> bool:
+        def has_room(t: _Routable) -> bool:
             mq = t.engine.scheduler.config.max_queue
             return mq is None or t.engine.scheduler.depth < mq
 
-        def dest_for(req, mid_flight: bool) -> Optional[_Worker]:
+        def dest_for(req, mid_flight: bool) -> Optional[_Routable]:
             return next(
                 (t for t in self._route_order(exclude=src)
                  if t.engine.feasible(req) and (mid_flight or has_room(t))),
                 None)
 
         moved = 0
-        occupied = [i for i, r in enumerate(src.engine.slots)
-                    if r is not None]
+        cost = {i: src.engine.lane_cost(i)
+                for i, r in enumerate(src.engine.slots) if r is not None}
+        occupied = sorted(cost, key=lambda i: (cost[i][0], -cost[i][1]))
+        if lanes is not None:
+            occupied = occupied[:max(lanes, 0)]
         for slot in occupied:
             # pick the destination BEFORE preempting: evicting a lane
             # that has nowhere to go would throw away its cache state
@@ -491,8 +864,61 @@ class ServingFleet:
                 src.engine.inject(req, force=True)
         return moved
 
+    def rebalance(self, group_name: str) -> bool:
+        """Re-cut a stage group's split from its members' LIVE derated
+        rates (the §5.2 rebalance mitigation, serving edition).  The
+        engine preempts every lane into its own queue — they re-admit
+        token-identically through the new stages via the same
+        preempt/inject machinery migration uses — and the layer params
+        that changed stage are charged over the link before decode
+        resumes.  Returns True if the cut actually changed."""
+        g = self.group(group_name)
+        derated = [m.spec.profile.derate(m.slowdown) for m in g.members]
+        plan = split_decode(g.costs, derated, stage_fixed_mem=g.fixed_mem)
+        if not plan.feasible or plan.cuts == g.engine.cuts:
+            return False
+        old = g.engine.cuts
+        moved = g.engine.recut(plan.cuts)
+        g._set_rates()
+        if moved:
+            g.recut_bytes += moved
+            # weights cross the slowest boundary link before decode resumes
+            g.pending.appendleft(
+                _Charge("link", 0, moved / min(g.link_bw)))
+        g.recuts += 1
+        self.recuts += 1
+        self.action_log.append((self.sim_t, Action(
+            "rebalance", group_name,
+            {"cuts": list(plan.cuts), "prev": list(old),
+             "moved_bytes": moved})))
+        return True
+
+    def _apply_member(self, g: _GroupRuntime, a: Action) -> None:
+        """Policy actions name WORKERS; for a stage-group member they act
+        on the group: duty stays per-member (duty-cycling one stage paces
+        the whole pipeline through its charges), drain/undrain drain the
+        group's admissions, and migrate becomes REBALANCE — a split
+        group's lanes cannot leave half their layers behind, but the cut
+        can move off the throttled stage."""
+        if a.kind == "duty_cycle":
+            next(m for m in g.members
+                 if m.name == a.worker).duty = a.detail["duty"]
+        elif a.kind == "drain":
+            self.drain(g.name)
+        elif a.kind == "undrain":
+            # only undrain once EVERY member recovered: the group is as
+            # hot as its hottest stage
+            if all(self._state_rank(m.name) == 0 for m in g.members):
+                self.undrain(g.name)
+        elif a.kind == "migrate":
+            self.rebalance(g.name)
+
     def _apply(self, actions: Sequence[Action]) -> None:
         for a in actions:
+            if a.worker in self._member_group:
+                self.action_log.append((self.sim_t, a))
+                self._apply_member(self._member_group[a.worker], a)
+                continue
             if a.worker not in self._by_name:
                 # a shared ThermalMonitor may track non-fleet workers
                 # (another fleet, the training pipeline); not ours to act on
@@ -505,7 +931,8 @@ class ServingFleet:
             elif a.kind == "undrain":
                 self.undrain(a.worker)
             elif a.kind == "migrate":
-                self.migrate(a.worker, queued=a.detail.get("queued", True))
+                self.migrate(a.worker, queued=a.detail.get("queued", True),
+                             lanes=a.detail.get("lanes"))
 
     # ------------------------------------------------------------------
     # introspection
@@ -532,8 +959,45 @@ class ServingFleet:
                                else ThermalState.MINIMAL.value),
                 slowdown=w.slowdown,
                 state_occupancy=occ.get(w.name, {}),
+                probes=w.probes,
+            )
+        per_group: Dict[str, GroupSnapshot] = {}
+        for g in self.groups:
+            recs = [r for r in self.completed if r.worker == g.name]
+            toks = sum(len(r.req.out_tokens) for r in recs)
+            members = {}
+            for m in g.members:
+                ws = self.monitor.workers.get(m.name)
+                members[m.name] = {
+                    "profile": m.spec.profile.name,
+                    "duty": m.duty,
+                    "slowdown": m.slowdown,
+                    "util": m.util,
+                    "probes": m.probes,
+                    "thermal_state": (ws.state.value if ws
+                                      else ThermalState.MINIMAL.value),
+                    "state_occupancy": occ.get(m.name, {}),
+                }
+            per_group[g.name] = GroupSnapshot(
+                name=g.name,
+                workers=tuple(m.name for m in g.members),
+                cuts=g.engine.cuts,
+                engine=g.engine.metrics_snapshot(),
+                completed=len(recs),
+                completed_tokens=toks,
+                goodput_tokens_per_s=toks / sim,
+                steps_run=g.steps_run,
+                drained=g.drained,
+                recuts=g.recuts,
+                frames_sent=g.engine.frames_sent,
+                frame_bytes=g.frame_bytes,
+                recut_bytes=g.recut_bytes,
+                transfer_s=g.transfer_s,
+                link_stall_ticks=g.link_stall_ticks,
+                members=members,
             )
         total_tokens = sum(len(r.req.out_tokens) for r in self.completed)
+        units: List[_Routable] = [*self.workers, *self.groups]
         return FleetSnapshot(
             sim_t=self.sim_t,
             ticks=self.ticks,
@@ -546,10 +1010,16 @@ class ServingFleet:
             drains=self.drains,
             undrains=self.undrains,
             rejected=self.routing_rejected
-            + sum(w.engine.scheduler.rejected_total for w in self.workers),
-            expired=sum(w.engine.scheduler.expired_total
-                        for w in self.workers),
+            + sum(u.engine.scheduler.rejected_total for u in units),
+            expired=sum(u.engine.scheduler.expired_total for u in units),
             per_worker=per_worker,
+            per_group=per_group,
+            recuts=self.recuts,
+            probes=sum(w.probes for w in self.workers)
+            + sum(m.probes for g in self.groups for m in g.members),
+            transfer_bytes=sum(g.frame_bytes + g.recut_bytes
+                               for g in self.groups),
+            transfer_s=sum(g.transfer_s for g in self.groups),
         )
 
 

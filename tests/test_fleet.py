@@ -302,6 +302,101 @@ def test_fleet_ignores_policy_actions_for_foreign_workers(small_lm):
     assert fleet.snapshot().drains == 0
 
 
+def test_fleet_deadlines_run_on_the_sim_clock(small_lm):
+    """Under drive_sim, Request.deadline_s is SIMULATED seconds: the
+    fleet stamps submissions with sim_t and the engines' clock is the
+    fleet's sim clock, so expiry follows the simulation — not host wall
+    time (which bears no relation to it)."""
+    model, params = small_lm
+    fleet = _fleet(model, params, names=("a",), rates=(20.0,), max_batch=1)
+    assert fleet.worker("a").engine._now() == fleet.sim_t
+    r0 = fleet.submit(np.arange(8, dtype=np.int32), max_new=40)   # hogs lane
+    # generous in sim terms (~4 ticks) but far below any wall-clock jit
+    # time: wall-clock evaluation would never expire it deterministically
+    r1 = fleet.submit(np.arange(5, dtype=np.int32), max_new=2,
+                      deadline_s=0.2)
+    r2 = fleet.submit(np.arange(5, dtype=np.int32), max_new=2,
+                      deadline_s=1e9)                  # never expires
+    eng = fleet.worker("a").engine
+    assert all(r.submitted_t == 0.0 for r in eng.queue)   # sim-t stamped
+    fleet.run_until_drained(max_ticks=5_000)
+    assert [r.rid for r in eng.scheduler.expired] == [r1]
+    done = {rec.req.rid for rec in fleet.completed}
+    assert done == {r0, r2}
+    assert fleet.snapshot().expired == 1
+
+
+def test_fleet_probes_drained_workers_at_paced_cost(small_lm):
+    """An idle drained worker is no longer observed for free: telemetry
+    arrives only through paced probes (one per probe_every_s), each
+    costing a step's compute — while a busy worker observes per tick and
+    pays no probes."""
+    model, params = small_lm
+    fleet = _fleet(model, params, probe_every_s=0.25)
+    fleet.drain("b")
+    for _ in range(4):
+        fleet.submit(np.arange(6, dtype=np.int32), max_new=24)
+    n_ticks = 20
+    for _ in range(n_ticks):
+        fleet.tick()
+    snap = fleet.snapshot()
+    a, b = snap.per_worker["a"], snap.per_worker["b"]
+    assert a.probes == 0                        # busy: steps ARE telemetry
+    assert 0 < b.probes <= 1 + n_ticks * fleet.tick_s / 0.25
+    # probes still calibrate the monitor: the drained worker has a state
+    assert fleet.monitor.workers["b"].steps == b.probes
+    assert snap.probes == b.probes
+
+
+def test_fleet_wall_telemetry_never_mixes_time_scales(small_lm):
+    """telemetry="wall": the monitor is calibrated on MEASURED dispatch
+    times, so probes must re-observe the last measured value — never the
+    synthetic sim step time — and must skip entirely before any real
+    dispatch ran (an unobserved worker beats a polluted baseline)."""
+    model, params = small_lm
+    # b never runs: its probes have nothing real to re-measure and skip
+    fleet = _fleet(model, params, telemetry="wall", probe_every_s=0.05)
+    fleet.drain("b")
+    fleet.submit(np.arange(6, dtype=np.int32), max_new=4)
+    fleet.run_until_drained(max_ticks=2_000)
+    for _ in range(6):
+        fleet.tick()
+    assert "b" not in fleet.monitor.workers
+    assert fleet.snapshot().per_worker["b"].probes == 0
+    # a ran: idle probes re-observe its last MEASURED wall latency, so
+    # the EWMA converges toward that value, not toward the 50ms sim step
+    a = fleet.worker("a")
+    ws = fleet.monitor.workers["a"]
+    assert a.last_wall_step_s is not None
+    before_gap = abs(ws.ewma_s - a.last_wall_step_s)
+    n_before, p_before = ws.steps, a.probes
+    for _ in range(8):
+        fleet.tick()
+    assert a.probes > p_before and ws.steps > n_before
+    assert abs(ws.ewma_s - a.last_wall_step_s) <= before_gap + 1e-12
+
+
+def test_fleet_migrate_picks_cheapest_victims_first(small_lm):
+    """Cost-aware victim choice: with lanes=1 the SHORTEST-context lane
+    moves (least re-prefill recompute), not the whole worker."""
+    model, params = small_lm
+    fleet = _fleet(model, params, max_batch=2)
+    fleet.drain("b")                            # both admissions land on a
+    r_short = fleet.submit(np.arange(4, dtype=np.int32), max_new=24)
+    r_long = fleet.submit(np.arange(20, dtype=np.int32), max_new=24)
+    for _ in range(3):
+        fleet.tick()                            # admit both into lanes
+    assert fleet.worker("a").engine.active() == 2
+    fleet.undrain("b")
+    assert fleet.migrate("a", lanes=1) == 1
+    snap = fleet.snapshot()
+    assert snap.migrations == 1
+    fleet.run_until_drained(max_ticks=5_000)
+    recs = {rec.req.rid: rec for rec in fleet.completed}
+    assert recs[r_short].worker == "b" and recs[r_short].migrated
+    assert recs[r_long].worker == "a" and not recs[r_long].migrated
+
+
 def test_fleet_duty_cycle_paces_steps(small_lm):
     model, params = small_lm
 

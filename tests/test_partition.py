@@ -4,7 +4,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.resnet34 import CONFIG
 from repro.core.partition import (pipeline_batch_seconds, plan_pipeline,
-                                  single_device_seconds, split_blocks)
+                                  single_device_seconds, split_blocks,
+                                  split_decode)
 from repro.hw.specs import IPHONE_11_PRO, IPHONE_16, XEON_E3_1225V3
 from repro.models.resnet import block_costs, init_resnet
 
@@ -61,6 +62,66 @@ def test_split_invariants(n_dev, n_blocks, seed):
     assert abs(plan.bottleneck
                - max(s + (plan.comm_seconds[i] if i < n_dev - 1 else 0)
                      for i, s in enumerate(plan.stage_seconds))) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# decode-mode split (serving)
+# ---------------------------------------------------------------------------
+def _decode_costs(n_blocks, mem_per_block, frame=4096.0):
+    return [(1.0 / n_blocks, frame, mem_per_block)] * n_blocks
+
+
+def test_split_decode_paper_pair_puts_more_layers_on_faster_phone():
+    """On the paper's own device numbers (Table 1 serving rates), the
+    decode search mirrors its hand-tuned asymmetry: the phone outrates
+    the Xeon (30 vs 6 steps/s), so it takes MOST of the layers — and the
+    stronger iPhone 16 takes at least as many as the iPhone 11 (the
+    paper's 'entire layer 3' vs 'before the 4th block of layer 3'
+    direction)."""
+    costs = _decode_costs(12, mem_per_block=64e6)     # fits everywhere
+    c11 = split_decode(costs, [XEON_E3_1225V3, IPHONE_11_PRO]).cuts[0]
+    c16 = split_decode(costs, [XEON_E3_1225V3, IPHONE_16]).cuts[0]
+    assert c11 < 6                     # phone (stage 1) holds the majority
+    assert c16 <= c11                  # stronger phone: no fewer layers
+    assert 0 < c16 <= c11 < 12
+
+
+def test_split_decode_memory_wall_constrains_the_phone():
+    """The §4.3 memory wall: when the model exceeds the iPhone 11's 2 GB,
+    the rate-optimal cut is INFEASIBLE and the search trades step time
+    for a cut whose phone stage fits — more layers stay on the host."""
+    free = split_decode(_decode_costs(12, 64e6),
+                        [XEON_E3_1225V3, IPHONE_11_PRO])
+    tight = split_decode(_decode_costs(12, 300e6),    # 3.6 GB model > 2 GB
+                         [XEON_E3_1225V3, IPHONE_11_PRO])
+    assert free.feasible and tight.feasible
+    assert tight.cuts[0] > free.cuts[0]
+    assert tight.stage_mem_bytes[1] <= IPHONE_11_PRO.mem_bytes
+    assert sum(c[2] for c in _decode_costs(12, 300e6)) \
+        > IPHONE_11_PRO.mem_bytes
+    # and the feasibility machinery reports honestly when NOTHING fits
+    hopeless = split_decode(_decode_costs(4, 40e9),
+                            [XEON_E3_1225V3, IPHONE_11_PRO])
+    assert not hopeless.feasible
+
+
+def test_split_decode_invariants_and_fixed_mem():
+    devs = [XEON_E3_1225V3, IPHONE_11_PRO, IPHONE_16]
+    costs = _decode_costs(9, 1e6)
+    plan = split_decode(costs, devs, stage_fixed_mem=(5e6, 0.0, 7e6))
+    assert list(plan.cuts) == sorted(set(plan.cuts))
+    assert len(plan.cuts) == 2 and all(0 < c < 9 for c in plan.cuts)
+    # sequential decode: per-token latency is the SUM, not the bottleneck
+    assert abs(plan.step_seconds
+               - (sum(plan.stage_seconds) + sum(plan.comm_seconds))) < 1e-15
+    assert plan.stage_mem_bytes[0] >= 5e6
+    assert plan.stage_mem_bytes[-1] >= 7e6
+    # derated devices shift layers off the slowed stage
+    slowed = [XEON_E3_1225V3, IPHONE_11_PRO.derate(8.0)]
+    base = split_decode(_decode_costs(12, 1e6),
+                        [XEON_E3_1225V3, IPHONE_11_PRO])
+    hot = split_decode(_decode_costs(12, 1e6), slowed)
+    assert hot.cuts[0] > base.cuts[0]
 
 
 @given(st.integers(2, 96), st.sampled_from([4, 8, 16]))

@@ -1,0 +1,330 @@
+"""Pipeline-split decode: stage models, PipelineEngine, fleet StageGroup."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.hw.specs import DeviceProfile
+from repro.models.api import (build_model, param_bytes, split_stage_params,
+                              stage_eligible, stage_model)
+from repro.runtime.elastic import ServingElasticPolicy
+from repro.serving.engine import ServeEngine
+from repro.serving.fleet import (ServingFleet, StageGroup, ThrottleTrace,
+                                 WorkerSpec, drive_sim)
+from repro.serving.pipeline_decode import (PipelineEngine,
+                                           boundary_frame_bytes,
+                                           plan_decode_split)
+from repro.serving.sampling import SamplingParams
+
+RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def lm4():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=4)
+    model = build_model(cfg, RCFG)
+    return model, model.init(jax.random.key(0))
+
+
+def _traffic(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6 + i) for i in range(n)]
+    samplings = [SamplingParams(temperature=2.0, top_k=16, seed=700 + i)
+                 if i % 2 else None for i in range(n)]
+    return prompts, samplings
+
+
+def _reference(model, params, prompts, samplings, max_new=8):
+    ref = ServeEngine(model, params, max_batch=len(prompts), max_len=MAX_LEN)
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=max_new, sampling=sp)
+    return {r.rid: r.out_tokens for r in ref.run_until_drained()}
+
+
+def _profile(name, rate=20.0, link=1e6, mem=1e12, **kw):
+    return DeviceProfile(name=name, year=2024, flops=1e12, mem_bytes=mem,
+                         mem_bw=1e9, link_bw=link, decode_steps_per_s=rate,
+                         prefill_tokens_per_s=1e5, **kw)
+
+
+# ---------------------------------------------------------------------------
+# stage execution hooks
+# ---------------------------------------------------------------------------
+def test_stage_composition_matches_full_model(lm4):
+    """Layer-sliced stages composed through the boundary hidden must be
+    BIT-identical to the full model — prefill logits, caches advancing,
+    and decode logits — for 2 and 3 stages."""
+    model, params = lm4
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    want, cache = model.prefill(params, {"tokens": toks}, MAX_LEN)
+    for cuts in [(2,), (1, 3)]:
+        sps = split_stage_params(model, params, cuts)
+        bounds = (0,) + cuts + (model.cfg.n_layers,)
+        stages = [stage_model(model, bounds[i], bounds[i + 1])
+                  for i in range(len(bounds) - 1)]
+        x, caches = None, []
+        for i, (sm, sp) in enumerate(zip(stages, sps)):
+            b = {"tokens": toks} if i == 0 else {"hidden": x}
+            x, c = sm.prefill(sp, b, MAX_LEN)
+            caches.append(c)
+        assert jnp.array_equal(want, x), cuts
+        # two decode steps stay bit-identical too
+        w, full_c = want, cache
+        for tok in (5, 17):
+            t = jnp.asarray([[tok]], jnp.int32)
+            w, full_c = model.decode_step(params, full_c, t)
+            x = t
+            for i, (sm, sp) in enumerate(zip(stages, sps)):
+                x, caches[i] = sm.decode_step(sp, caches[i], x)
+            assert jnp.array_equal(w, x), (cuts, tok)
+
+
+def test_stage_eligibility_gating():
+    assert stage_eligible(reduced_config(get_config("granite-8b")))
+    assert stage_eligible(reduced_config(get_config("grok-1-314b")))   # moe
+    for arch in ("zamba2-7b", "rwkv6-1.6b", "whisper-small"):
+        cfg = reduced_config(get_config(arch))
+        assert not stage_eligible(cfg), arch
+        model = build_model(cfg, RCFG)
+        with pytest.raises(ValueError, match="cannot be layer-split"):
+            stage_model(model, 0, 1)
+
+
+def test_split_stage_params_memory_accounting(lm4):
+    """Each stage holds ONLY its slice (plus ends): the memory-wall
+    arithmetic the split exists for.  Tied embeddings are charged on both
+    ends, so the stage sum exceeds the full tree by exactly one table."""
+    model, params = lm4
+    sps = split_stage_params(model, params, (2,))
+    total = param_bytes(params)
+    embed = param_bytes(params["embed"])
+    assert all(param_bytes(p) < total for p in sps)
+    assert sum(param_bytes(p) for p in sps) == total + embed  # tied: 2 tables
+    assert "final_ln" not in sps[0] and "blocks" in sps[0]
+    b0 = jax.tree.leaves(sps[0]["blocks"])[0]
+    assert b0.shape[0] == 2
+
+
+def test_stage_model_stubs_and_bounds(lm4):
+    model, params = lm4
+    with pytest.raises(ValueError, match="bad stage range"):
+        stage_model(model, 2, 2)
+    sm = stage_model(model, 0, 2)
+    with pytest.raises(RuntimeError, match="full model"):
+        sm.init(jax.random.key(0))
+    # lru-cached: same cut -> same object -> shared jitted programs
+    assert stage_model(model, 0, 2) is sm
+
+
+# ---------------------------------------------------------------------------
+# PipelineEngine
+# ---------------------------------------------------------------------------
+def test_pipeline_engine_token_identical(lm4):
+    model, params = lm4
+    prompts, samplings = _traffic(model.cfg, 5)
+    want = _reference(model, params, prompts, samplings)
+    pipe = PipelineEngine(model, params, max_batch=3, max_len=MAX_LEN,
+                          cuts=(2,))
+    for p, sp in zip(prompts, samplings):
+        pipe.submit(p, max_new=8, sampling=sp)
+    got = {r.rid: r.out_tokens for r in pipe.run_until_drained()}
+    assert got == want
+    # every decode step shipped one real frame per boundary, and prefill
+    # shipped the full-prompt hidden — all through the codec
+    assert pipe.frames_sent > 0
+    assert pipe.decode_frame_bytes_total > 0
+    assert pipe.prefill_frame_bytes_total > 0
+    assert (pipe.frame_bytes_total == pipe.decode_frame_bytes_total
+            + pipe.prefill_frame_bytes_total)
+
+
+def test_pipeline_engine_rejects_extra_inputs(lm4):
+    model, params = lm4
+    pipe = PipelineEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                          cuts=(2,))
+    with pytest.raises(ValueError, match="extra model inputs"):
+        pipe.submit(np.arange(4, dtype=np.int32), max_new=2,
+                    frontend=np.zeros((2, 8), np.float32))
+
+
+def test_pipeline_engine_finish_at_admission(lm4):
+    model, params = lm4
+    pipe = PipelineEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                          cuts=(2,))
+    pipe.submit(np.arange(1, 5, dtype=np.int32), max_new=1)
+    done = pipe.run_until_drained(max_steps=5)
+    assert len(done) == 1 and len(done[0].out_tokens) == 1
+    assert pipe.active() == 0
+
+
+def test_recut_is_token_identical_and_charges_moved_layers(lm4):
+    model, params = lm4
+    prompts, samplings = _traffic(model.cfg, 5, seed=3)
+    want = _reference(model, params, prompts, samplings)
+    pipe = PipelineEngine(model, params, max_batch=3, max_len=MAX_LEN,
+                          cuts=(1,))
+    for p, sp in zip(prompts, samplings):
+        pipe.submit(p, max_new=8, sampling=sp)
+    for _ in range(3):
+        pipe.step()
+    layer_bytes = param_bytes(
+        {"blocks": jax.tree.map(lambda a: a, params["blocks"])}) // 4
+    moved = pipe.recut((3,))
+    assert moved == 2 * layer_bytes          # layers 1 and 2 changed stage
+    assert pipe.recut((3,)) == 0             # same cut: nothing to do
+    assert pipe.cuts == (3,) and pipe.recuts == 1
+    got = {r.rid: r.out_tokens for r in pipe.run_until_drained()}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+def test_plan_decode_split_respects_memory_wall(lm4):
+    """When the model fits NEITHER worker whole, the planner must find a
+    feasible cut; when one stage's device is tighter, the cut shifts
+    layers off it."""
+    model, params = lm4
+    total = param_bytes(params)
+    devs = [_profile("a", mem=0.75 * total), _profile("b", mem=0.75 * total)]
+    plan = plan_decode_split(model, params, devs, max_batch=3,
+                             max_len=MAX_LEN)
+    assert plan.feasible
+    assert all(m <= d.mem_bytes for m, d in zip(plan.stage_mem_bytes, devs))
+    assert total > max(d.mem_bytes for d in devs)   # the wall is real
+    # squeeze worker b: it must end up with fewer layers
+    tight = [_profile("a", mem=0.9 * total), _profile("b", mem=0.45 * total)]
+    plan2 = plan_decode_split(model, params, tight, max_batch=3,
+                              max_len=MAX_LEN)
+    assert plan2.feasible
+    assert plan2.cuts[0] >= plan.cuts[0]
+
+
+def test_boundary_frame_bytes_is_real_codec_framing(lm4):
+    model, _ = lm4
+    raw = 3 * 1 * model.cfg.d_model * 4          # (B=3, 1, D) float32
+    framed = boundary_frame_bytes(model, 3)
+    assert framed > raw                          # header + dims + CRC
+    assert framed < raw + 256                    # ...but only by framing
+
+
+# ---------------------------------------------------------------------------
+# fleet StageGroup
+# ---------------------------------------------------------------------------
+def test_fleet_stage_group_serves_and_charges_transfers(lm4):
+    model, params = lm4
+    total = param_bytes(params)
+    grp = StageGroup("pair", (WorkerSpec("s0", _profile("d0",
+                                                        mem=0.75 * total)),
+                              WorkerSpec("s1", _profile("d1",
+                                                        mem=0.75 * total))),
+                     max_batch=3)
+    fleet = ServingFleet(model, params, groups=[grp], max_len=MAX_LEN,
+                         tick_s=0.05)
+    prompts, samplings = _traffic(model.cfg, 6, seed=5)
+    arrivals = np.linspace(0.0, 0.5, len(prompts))
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=8,
+                                     sampling=samplings[i]))
+    snap = fleet.snapshot()
+    g = snap.per_group["pair"]
+    assert snap.completed == len(prompts)
+    assert g.completed == len(prompts)
+    # transfers are NOT free: real frames crossed, and the link spent
+    # simulated seconds carrying them
+    assert g.frames_sent > 0 and g.frame_bytes > 0
+    assert g.transfer_s > 0.0
+    assert snap.transfer_bytes == g.frame_bytes
+    # the split pair serves a model bigger than either member alone: the
+    # full params exceed each member's mem_bytes, every stage slice fits
+    eng = fleet.group("pair").engine
+    assert all(total > w.profile.mem_bytes for w in grp.workers)
+    for sb, w in zip(eng.stage_param_bytes, grp.workers):
+        assert sb <= w.profile.mem_bytes
+    want = _reference(model, params, prompts, samplings)
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == want
+
+
+def test_fleet_narrow_link_slows_the_group(lm4):
+    """The link model must bite: the same group on a 1000x narrower link
+    finishes strictly later in SIM time, with frames crossing ticks."""
+    model, params = lm4
+    prompts, samplings = _traffic(model.cfg, 4, seed=7)
+    arrivals = np.zeros(len(prompts))
+
+    def run(link):
+        grp = StageGroup("pair", (WorkerSpec("s0", _profile("d0", link=link)),
+                                  WorkerSpec("s1", _profile("d1", link=link))),
+                         cuts=(2,), max_batch=4)
+        fleet = ServingFleet(model, params, groups=[grp], max_len=MAX_LEN,
+                             tick_s=0.05)
+        drive_sim(fleet, arrivals,
+                  lambda i: fleet.submit(prompts[i], max_new=8,
+                                         sampling=samplings[i]))
+        return fleet.snapshot()
+
+    wide, narrow = run(1e9), run(2e4)
+    assert wide.completed == narrow.completed == len(prompts)
+    assert narrow.sim_t > wide.sim_t
+    assert narrow.per_group["pair"].transfer_s \
+        > wide.per_group["pair"].transfer_s
+    # at 20 kB/s a multi-kB frame outlives the 50 ms tick: it must have
+    # stayed in flight across tick boundaries
+    assert narrow.per_group["pair"].link_stall_ticks > 0
+    assert narrow.goodput_tokens_per_s < wide.goodput_tokens_per_s
+
+
+def test_fleet_rebalance_recuts_split_token_identically(lm4):
+    """A throttling stage member triggers the elastic REBALANCE action:
+    the cut moves layers off the hot stage, the moved weights are charged
+    over the link, and every request stays token-identical."""
+    model, params = lm4
+    grp = StageGroup("pair", (WorkerSpec("s0", _profile("d0")),
+                              WorkerSpec("s1", _profile("d1"))),
+                     cuts=(2,), max_batch=3)
+    fleet = ServingFleet(model, params, groups=[grp], max_len=MAX_LEN,
+                         tick_s=0.05, policy=ServingElasticPolicy(),
+                         throttle=ThrottleTrace({"s1": (0.3, 6.0, 0.1)}))
+    prompts, samplings = _traffic(model.cfg, 6, seed=9)
+    arrivals = np.linspace(0.0, 0.5, len(prompts))
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=8,
+                                     sampling=samplings[i]))
+    snap = fleet.snapshot()
+    g = snap.per_group["pair"]
+    assert snap.completed == len(prompts)
+    assert snap.recuts >= 1 and g.recuts >= 1
+    assert g.cuts[0] > 2                     # layers moved OFF the hot stage
+    assert g.recut_bytes > 0                 # ...and were paid for
+    assert any(a.kind == "rebalance" for _, a in fleet.action_log)
+    want = _reference(model, params, prompts, samplings)
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == want
+
+
+def test_fleet_group_routes_alongside_replica_worker(lm4):
+    """A stage group is a routable unit like any worker: admissions
+    balance across both, and both serve token-identically."""
+    model, params = lm4
+    grp = StageGroup("pair", (WorkerSpec("s0", _profile("d0")),
+                              WorkerSpec("s1", _profile("d1"))),
+                     cuts=(2,), max_batch=2)
+    fleet = ServingFleet(model, params,
+                         [WorkerSpec("solo", _profile("ds"))],
+                         groups=[grp], max_len=MAX_LEN, tick_s=0.05)
+    prompts, samplings = _traffic(model.cfg, 6, seed=11)
+    arrivals = np.linspace(0.0, 0.4, len(prompts))
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=6,
+                                     sampling=samplings[i]))
+    homes = set(fleet.routed.values())
+    assert homes == {"solo", "pair"}
+    want = _reference(model, params, prompts, samplings, max_new=6)
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == want

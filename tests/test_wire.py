@@ -67,3 +67,38 @@ def test_truncation_detected():
     data = codec.dumps({"a": np.arange(64, dtype=np.float32)})
     with pytest.raises(codec.WireError):
         codec.loads(data[:-6])
+
+
+# ---------------------------------------------------------------------------
+# boundary-activation frames (the pipeline-split serving plane)
+# ---------------------------------------------------------------------------
+def test_bf16_boundary_activation_frame_roundtrip():
+    """A (B, 1, D) bf16 decode-step boundary frame — what pipeline-split
+    decode ships every step — must round-trip BIT-exactly (bf16 rides the
+    wire as its uint16 pattern; any value change would break the
+    token-identity contract), with a small fixed framing overhead."""
+    import ml_dtypes
+    rng = np.random.default_rng(0)
+    bf16 = np.dtype(ml_dtypes.bfloat16)
+    for shape in [(3, 1, 256), (1, 48, 256)]:    # decode + prefill frames
+        arr = rng.standard_normal(shape).astype(np.float32).astype(bf16)
+        data = codec.dumps(arr)
+        out = codec.loads(data)
+        assert out.dtype == bf16
+        np.testing.assert_array_equal(arr.view(np.uint16),
+                                      out.view(np.uint16))
+        raw = arr.size * 2
+        assert raw < len(data) < raw + 256       # header + dims + CRC only
+
+
+def test_bf16_tensor_frame_crc_covers_payload():
+    import io
+
+    import ml_dtypes
+    arr = np.ones((4, 1, 8), np.dtype(ml_dtypes.bfloat16))
+    buf = io.BytesIO()
+    codec.encode_tensor(arr, buf)
+    data = bytearray(buf.getvalue())
+    data[-6] ^= 0x40                             # flip a payload bit
+    with pytest.raises(codec.WireError, match="CRC"):
+        codec.decode_tensor(io.BytesIO(bytes(data)))
