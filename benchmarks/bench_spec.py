@@ -1,0 +1,228 @@
+"""Speculative decoding on the heterogeneous fleet: draft fast, verify slow.
+
+The fleet asymmetry the paper builds on — a phone whose short bursts are
+FAST next to the host's steady grind — is exactly what speculative
+decoding converts into decode throughput: an ``a18-pro`` draft proposes
+``k`` tokens per round, the ``m2-max-cpu`` target verifies them in one
+scanned window, and every proposal/commit exchange crosses the link as a
+real wire-codec frame charged against the pair's link budget.
+
+Two sections:
+
+1. **aligned draft** — the target's layers past the first are zeroed into
+   exact residual identities, so a 1-layer prefix draft (an honest 1/4
+   compute share) proposes exactly what the target samples.  Asserted
+   (CI-gated via ``bench-smoke``): acceptance rate 1.0, the SpecPair
+   fleet clears >= 1.5x the decode goodput of the same target serving
+   alone, EVERY output token-identical to a plain single-engine run, and
+   drafted-token frames actually crossed the charged link (bytes > 0).
+2. **misaligned draft** — an independently-initialised draft whose
+   proposals mostly miss: goodput degrades (rollback is not free) but the
+   outputs stay bit-for-bit the baseline streams — the correctness story
+   is independent of draft quality.
+
+JSON (speedup, acceptance series, per-direction frame bytes) lands in
+``experiments/bench/spec.json`` and is uploaded as a CI artifact.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.hw.specs import get_profile
+from repro.models.api import build_model
+from repro.serving.engine import ServeEngine
+from repro.serving.fleet import (ServingFleet, SpecPair, WorkerSpec,
+                                 drive_sim)
+from repro.serving.sampling import SamplingParams
+
+MAX_LEN = 96
+TICK_S = 0.02
+SPEC_K = 3
+
+
+def _build():
+    """4-layer target with layers 1..3's output projections zeroed (exact
+    residual identities) + the 1-layer prefix as an ALIGNED draft, and an
+    independently-initialised 1-layer MISALIGNED draft."""
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=4)
+    rcfg = RunConfig(param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+    model = build_model(cfg, rcfg)
+    params = model.init(jax.random.key(0))
+    for mod, name in (("attn", "wo"), ("mlp", "wo")):
+        w = np.asarray(params["blocks"][mod][name]).copy()
+        w[1:] = 0.0
+        params["blocks"][mod][name] = jnp.asarray(w)
+    dcfg = dataclasses.replace(cfg, n_layers=1)
+    draft = build_model(dcfg, rcfg)
+    aligned = {"embed": params["embed"], "final_ln": params["final_ln"],
+               "blocks": jax.tree_util.tree_map(lambda x: x[:1],
+                                                params["blocks"])}
+    misaligned = draft.init(jax.random.key(3))
+    return cfg, model, params, draft, aligned, misaligned
+
+
+def _traffic(cfg, n, *, span_s, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(6, 16))) for _ in range(n)]
+    arrivals = np.linspace(0.0, span_s, n)
+    samplings = [SamplingParams(temperature=2.0, top_k=32, seed=1000 + i)
+                 if i % 3 == 0 else None for i in range(n)]
+    return prompts, arrivals, samplings
+
+
+def _reference_tokens(model, params, prompts, samplings, max_new):
+    """Plain single-engine run: the token-identity oracle."""
+    ref = ServeEngine(model, params, max_batch=len(prompts), max_len=MAX_LEN)
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=max_new, sampling=sp)
+    return {r.rid: r.out_tokens for r in ref.run_until_drained()}
+
+
+def _run_target_alone(model, params, prompts, arrivals, samplings, max_new):
+    """The comparison floor: the same target device serving solo."""
+    fleet = ServingFleet(
+        model, params,
+        [WorkerSpec("host", get_profile("m2-max-cpu"), max_batch=4)],
+        max_len=MAX_LEN, tick_s=TICK_S)
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=max_new,
+                                     sampling=samplings[i]))
+    return fleet, fleet.snapshot()
+
+
+def _run_spec_pair(model, params, draft, dparams, prompts, arrivals,
+                   samplings, max_new):
+    pair = SpecPair(name="pair",
+                    draft=WorkerSpec("phone", get_profile("a18-pro")),
+                    target=WorkerSpec("host", get_profile("m2-max-cpu")),
+                    draft_model=draft, draft_params=dparams,
+                    spec_k=SPEC_K, max_batch=4)
+    fleet = ServingFleet(model, params, spec_pairs=[pair], max_len=MAX_LEN,
+                         tick_s=TICK_S)
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=max_new,
+                                     sampling=samplings[i]))
+    return fleet, fleet.snapshot()
+
+
+def bench_aligned(cfg, model, params, draft, dparams, *, smoke: bool):
+    n = 8 if smoke else 20
+    max_new = 24 if smoke else 32
+    span = 0.3 if smoke else 0.8
+    prompts, arrivals, samplings = _traffic(cfg, n, span_s=span)
+
+    f_ref, ref = _run_target_alone(model, params, prompts, arrivals,
+                                   samplings, max_new)
+    f_spec, spec = _run_spec_pair(model, params, draft, dparams, prompts,
+                                  arrivals, samplings, max_new)
+    assert ref.completed == spec.completed == n, \
+        f"dropped work: ref={ref.completed} spec={spec.completed} of {n}"
+
+    want = _reference_tokens(model, params, prompts, samplings, max_new)
+    got = {rec.req.rid: rec.req.out_tokens for rec in f_spec.completed}
+    assert got == want, \
+        "speculative fleet outputs must be token-identical to the plain run"
+
+    ss = spec.per_spec["pair"]
+    speedup = spec.goodput_tokens_per_s / ref.goodput_tokens_per_s
+    assert ss.engine.spec_acceptance_rate == 1.0, (
+        f"aligned draft must be accepted wholesale, got "
+        f"{ss.engine.spec_acceptance_rate:.3f}")
+    assert ss.frame_bytes > 0, "draft/verify frames must cross the link"
+    assert speedup >= 1.5, (
+        f"spec pair must clear >= 1.5x the solo target's decode goodput, "
+        f"got {speedup:.2f}x ({spec.goodput_tokens_per_s:.1f} vs "
+        f"{ref.goodput_tokens_per_s:.1f} tok/s)")
+
+    rows = [
+        ["spec_target_alone", round(ref.sim_t * 1e6, 0),
+         f"goodput={ref.goodput_tokens_per_s:.1f}tok/s"],
+        ["spec_pair_aligned", round(spec.sim_t * 1e6, 0),
+         f"goodput={spec.goodput_tokens_per_s:.1f}tok/s",
+         f"acceptance={ss.engine.spec_acceptance_rate:.2f}",
+         f"rounds={ss.engine.spec_rounds}",
+         f"frame_bytes={ss.frame_bytes}",
+         f"transfer_s={ss.transfer_s:.4f}"],
+        ["spec_speedup", round(speedup, 2), "token_identical=True",
+         f"k={SPEC_K}"],
+    ]
+    summary = {
+        "speedup": speedup,
+        "goodput_spec": spec.goodput_tokens_per_s,
+        "goodput_ref": ref.goodput_tokens_per_s,
+        "acceptance_rate": ss.engine.spec_acceptance_rate,
+        "accepted_series": list(ss.engine.spec_accepted_series),
+        "rounds": ss.engine.spec_rounds,
+        "frame_bytes": ss.frame_bytes,
+        "transfer_s": ss.transfer_s,
+        "token_identical": got == want,
+        "spec": ss.engine.as_dict(),
+    }
+    return rows, summary
+
+
+def bench_misaligned(cfg, model, params, draft, dparams, *, smoke: bool):
+    n = 6 if smoke else 16
+    max_new = 16 if smoke else 24
+    prompts, arrivals, samplings = _traffic(cfg, n, span_s=0.3, seed=5)
+    f_spec, spec = _run_spec_pair(model, params, draft, dparams, prompts,
+                                  arrivals, samplings, max_new)
+    assert spec.completed == n, f"dropped work: {spec.completed}/{n}"
+    want = _reference_tokens(model, params, prompts, samplings, max_new)
+    got = {rec.req.rid: rec.req.out_tokens for rec in f_spec.completed}
+    assert got == want, \
+        "a bad draft may slow decode down but NEVER changes the stream"
+    ss = spec.per_spec["pair"]
+    assert ss.engine.spec_acceptance_rate < 1.0
+    rows = [["spec_pair_misaligned", round(spec.sim_t * 1e6, 0),
+             f"goodput={spec.goodput_tokens_per_s:.1f}tok/s",
+             f"acceptance={ss.engine.spec_acceptance_rate:.2f}",
+             f"rounds={ss.engine.spec_rounds}",
+             "token_identical=True"]]
+    summary = {
+        "goodput": spec.goodput_tokens_per_s,
+        "acceptance_rate": ss.engine.spec_acceptance_rate,
+        "accepted_series": list(ss.engine.spec_accepted_series),
+        "rounds": ss.engine.spec_rounds,
+        "frame_bytes": ss.frame_bytes,
+        "token_identical": got == want,
+    }
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized config")
+    args = ap.parse_args(argv)
+    cfg, model, params, draft, aligned, misaligned = _build()
+    rows, summary = bench_aligned(cfg, model, params, draft, aligned,
+                                  smoke=args.smoke)
+    mis_rows, mis_summary = bench_misaligned(cfg, model, params, draft,
+                                             misaligned, smoke=args.smoke)
+    rows += mis_rows
+    width = max(len(r) for r in rows)
+    rows = [r + [""] * (width - len(r)) for r in rows]
+    emit("spec", rows,
+         ["name", "us_sim"] + [f"d{i}" for i in range(1, width - 1)])
+    out = OUT_DIR / "spec.json"
+    out.write_text(json.dumps({
+        "smoke": args.smoke,
+        "rows": [[str(x) for x in r] for r in rows],
+        "aligned": summary,
+        "misaligned": mis_summary,
+    }, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

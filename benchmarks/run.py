@@ -9,8 +9,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
-                        bench_schedules, bench_serving, bench_thermal,
-                        bench_tool_parallel, bench_wire, roofline_report)
+                        bench_schedules, bench_serving, bench_spec,
+                        bench_thermal, bench_tool_parallel, bench_wire,
+                        roofline_report)
 
 ALL = {
     "devices": bench_devices.main,          # paper Table 1
@@ -24,6 +25,8 @@ ALL = {
     # engine under load (ROADMAP); explicit empty argv — its CLI would
     # otherwise swallow the orchestrator's own bench-name arguments
     "serving": lambda: bench_serving.main([]),
+    # speculative pairs on the fleet (ROADMAP); same explicit-argv guard
+    "spec": lambda: bench_spec.main([]),
 }
 
 

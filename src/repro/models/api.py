@@ -75,6 +75,13 @@ class DecodeState:
     right-padding is provably inert; ``pool_init(n_lanes, n_blocks,
     block_size)`` / ``pool_step(params, cache, tokens, block_tables)``
     only where a block pool is exact.
+
+    ``window_step(params, cache, tokens (B, W))`` (and its pooled twin
+    ``pool_window_step``) runs W sequential decode steps in one dispatch,
+    returning per-position logits (B, W, Vp) — the speculative-decoding
+    verify entry point.  It is always a scan of the single-step body, so
+    its outputs are bitwise identical to W separate ``decode_step``
+    calls (see :func:`repro.models.lm.lm_decode_window`).
     """
 
     kind: str
@@ -83,6 +90,11 @@ class DecodeState:
                  Tuple[jax.Array, dict]]] = None
     pool_init: Optional[Callable[[int, int, int], dict]] = None
     pool_step: Optional[
+        Callable[[dict, dict, jax.Array, jax.Array],
+                 Tuple[jax.Array, dict]]] = None
+    window_step: Optional[
+        Callable[[dict, dict, jax.Array], Tuple[jax.Array, dict]]] = None
+    pool_window_step: Optional[
         Callable[[dict, dict, jax.Array, jax.Array],
                  Tuple[jax.Array, dict]]] = None
 
@@ -104,19 +116,38 @@ class Model:
     decode_state: DecodeState = DecodeState(kind="attention")
 
 
+def _window_from_step(step: Callable) -> Callable:
+    """Lift a single-token ``step(params, cache, (B,1))`` into a W-token
+    window via ``lax.scan`` — bitwise identical to W separate steps (the
+    scan body IS the step program; see :func:`repro.models.lm.lm_decode_window`)."""
+
+    def window(params, cache, tokens):
+        def body(c, tok):
+            lg, c = step(params, c, tok)
+            return c, lg
+
+        cache, lgs = jax.lax.scan(
+            body, cache, jnp.moveaxis(tokens, 1, 0)[:, :, None])
+        return jnp.moveaxis(lgs, 0, 1), cache
+
+    return window
+
+
 def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
     pdt = jnp.dtype(rcfg.param_dtype)
     cdt = jnp.dtype(rcfg.compute_dtype)
     if cfg.family == "audio" and cfg.n_enc_layers:
+        ed_step = lambda p, c, t: ED.encdec_decode_step(cfg, p, c, t, rcfg)
         return Model(
             cfg=cfg, rcfg=rcfg,
             init=lambda key: ED.init_encdec(cfg, key, pdt),
             loss=lambda p, b: ED.encdec_loss(cfg, p, b, rcfg),
             prefill=lambda p, b, ml: ED.encdec_prefill(cfg, p, b, rcfg, ml),
-            decode_step=lambda p, c, t: ED.encdec_decode_step(cfg, p, c, t, rcfg),
+            decode_step=ed_step,
             init_cache=lambda bsz, ml: ED.init_encdec_cache(cfg, bsz, ml, cdt),
             input_specs=lambda s: ED.encdec_input_specs(cfg, s, rcfg),
-            decode_state=DecodeState(kind="encdec"),
+            decode_state=DecodeState(kind="encdec",
+                                     window_step=_window_from_step(ed_step)),
         )
     # right-padded batched prefill is exact only when pad tokens cannot leak
     # into real lanes: full causal attention, no recurrent state, no frontend.
@@ -151,6 +182,11 @@ def build_model(cfg: ModelConfig, rcfg: RunConfig) -> Model:
                 if pool_ok else None),
             pool_step=(
                 (lambda p, c, t, bt: LM.lm_decode_step_pool(cfg, p, c, t, bt, rcfg))
+                if pool_ok else None),
+            window_step=lambda p, c, t: LM.lm_decode_window(cfg, p, c, t, rcfg),
+            pool_window_step=(
+                (lambda p, c, t, bt: LM.lm_decode_window_pool(
+                    cfg, p, c, t, bt, rcfg))
                 if pool_ok else None),
         ),
     )

@@ -347,6 +347,34 @@ def lm_decode_step(cfg: ModelConfig, params: dict, cache: dict,
     return logits, new_cache
 
 
+def lm_decode_window(cfg: ModelConfig, params: dict, cache: dict,
+                     tokens: jax.Array,
+                     rcfg: RunConfig) -> Tuple[jax.Array, dict]:
+    """W sequential decode steps in ONE dispatch (speculative verify).
+
+    tokens: (B, W) int32 — W consecutive next-token inputs per lane.
+    Returns (logits (B, W, Vp) — the logits AFTER each token — and the
+    cache advanced by W positions).
+
+    This is a ``lax.scan`` of :func:`lm_decode_step`'s program, NOT a
+    parallel multi-token attention window: a parallel window changes the
+    attention reduction shapes, and XLA's reduction order then differs
+    from single-token decode at the ~1e-6 level — enough to break the
+    bit-for-bit greedy-identity guarantee speculative verification is
+    built on.  The scan re-runs the exact single-step body, so its
+    logits and cache are bitwise identical to W separate jitted steps
+    while still amortising dispatch overhead into one program.
+    """
+
+    def body(c, tok):
+        lg, c = lm_decode_step(cfg, params, c, tok, rcfg)
+        return c, lg
+
+    cache, lgs = jax.lax.scan(
+        body, cache, jnp.moveaxis(tokens, 1, 0)[:, :, None])
+    return jnp.moveaxis(lgs, 0, 1), cache
+
+
 def lm_decode_step_pool(cfg: ModelConfig, params: dict, cache: dict,
                         tokens: jax.Array, block_tables: jax.Array,
                         rcfg: RunConfig) -> Tuple[jax.Array, dict]:
@@ -378,6 +406,24 @@ def lm_decode_step_pool(cfg: ModelConfig, params: dict, cache: dict,
     x = rmsnorm(params["final_ln"], x)
     logits = x[:, -1] @ head_weight(cfg, params, cdt)
     return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def lm_decode_window_pool(cfg: ModelConfig, params: dict, cache: dict,
+                          tokens: jax.Array, block_tables: jax.Array,
+                          rcfg: RunConfig) -> Tuple[jax.Array, dict]:
+    """W sequential pooled decode steps in one dispatch (paged verify).
+
+    Same contract and bitwise rationale as :func:`lm_decode_window`,
+    scanning :func:`lm_decode_step_pool`.  tokens: (B, W) int32.
+    """
+
+    def body(c, tok):
+        lg, c = lm_decode_step_pool(cfg, params, c, tok, block_tables, rcfg)
+        return c, lg
+
+    cache, lgs = jax.lax.scan(
+        body, cache, jnp.moveaxis(tokens, 1, 0)[:, :, None])
+    return jnp.moveaxis(lgs, 0, 1), cache
 
 
 # ---------------------------------------------------------------------------

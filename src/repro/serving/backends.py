@@ -28,6 +28,18 @@ Protocol (one backend instance per engine; ``slot`` is a lane index):
   or uncache a sole-holder cached one.  ``False`` = out of memory, the
   engine must preempt a victim and retry.
 * ``step(params, tokens, active)`` — advance every lane one token.
+* ``append_tokens(slot, toks)`` / ``verify_step(params, tokens, active)``
+  / ``rollback(slot, n)`` — the speculative-decoding verify plumbing:
+  reserve write capacity for ``len(toks)`` consecutive positions (paged
+  grows / COW-splits per position; ``False`` = pool exhausted), advance
+  every lane W tokens in one scanned dispatch returning per-position
+  logits (B, W, Vp), then truncate the last ``n`` of a lane's writes
+  after partial acceptance (dense/paged retreat the position; recurrent
+  state is not position-addressed, so the backend replays the kept
+  prefix of the verify window from a host-side stash).
+* ``reset_lane(slot)`` — return a lane to the empty-stream state (the
+  draft side of a speculative pair admits 1-token prompts with nothing
+  to prefill).
 * ``snapshot(slot)`` / ``restore(slot, snap)`` — preemption support:
   backends with cheap constant-size state return it host-side so a
   preempted request resumes WITHOUT recompute; ``None`` means the
@@ -146,6 +158,36 @@ def _pool_step_jit(decode_state):
     return jax.jit(decode_state.pool_step, donate_argnums=1)
 
 
+@functools.lru_cache(maxsize=64)
+def _window_jit(model: Model, donate: bool):
+    """Jitted W-token verify window.  ``donate=False`` for the recurrent
+    backend, whose rollback replays from a stashed pre-window cache that
+    donation would invalidate."""
+    ws = model.decode_state.window_step
+    if ws is None:
+        raise ValueError(
+            f"model family {model.cfg.family!r} wires no window_step; "
+            f"speculative verify is unavailable on it")
+    return jax.jit(ws, donate_argnums=1) if donate else jax.jit(ws)
+
+
+@functools.lru_cache(maxsize=64)
+def _pool_window_jit(decode_state):
+    return jax.jit(decode_state.pool_window_step, donate_argnums=1)
+
+
+def _dense_add_pos(cache, slot, delta):
+    return {**cache, "pos": cache["pos"].at[slot].add(delta)}
+
+
+def _dense_set_pos(cache, slot, val):
+    return {**cache, "pos": cache["pos"].at[slot].set(val)}
+
+
+_DENSE_ADD_POS = jax.jit(_dense_add_pos, donate_argnums=0)
+_DENSE_SET_POS = jax.jit(_dense_set_pos, donate_argnums=0)
+
+
 def _pool_paste(cache, src_layers, src_lane, flat_idx, dst_slot, length):
     """Scatter lane ``src_lane`` of a prefill cache into a lane's
     allocated pool blocks.  ``flat_idx`` (width,) maps prefill positions
@@ -249,6 +291,7 @@ class DenseBackend(CacheBackend):
         self._lane_ax, _, self._paste, self._extract = _lane_tools(
             model, n_lanes, max_len)
         self._decode = _decode_jit(model)
+        self._window = None          # built on first verify_step
 
     # ------------------------------------------------------------------
     def token_footprint(self, n_ctx: int, max_new: int,
@@ -279,6 +322,39 @@ class DenseBackend(CacheBackend):
         logits, self.cache = self._decode(params, self.cache,
                                           jnp.asarray(tokens))
         return logits
+
+    # -- speculative verify plumbing -----------------------------------
+    def append_tokens(self, slot: int,
+                      toks: Sequence[int]) -> bool:
+        return True          # lane strips are pre-sized max_len wide
+
+    def verify_step(self, params, tokens: np.ndarray, active: np.ndarray):
+        """W sequential decode steps in one dispatch.  tokens (B, W);
+        returns per-position logits (B, W, Vp).  Every lane's pos
+        advances by W — idle-lane garbage, reset at the next paste, the
+        same contract as ``step``."""
+        if self._window is None:
+            self._window = _window_jit(self.model, True)
+        logits, self.cache = self._window(params, self.cache,
+                                          jnp.asarray(tokens))
+        return logits
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Un-write the lane's last ``n`` positions.  Attention K/V is
+        position-addressed: retreating pos is enough, the stale entries
+        are masked out of every read and overwritten by the next write."""
+        if n <= 0:
+            return
+        if self.model.decode_state.kind == "recurrent":
+            raise RuntimeError(
+                "dense lanes cannot roll back recurrent state; use "
+                "backend='recurrent'")
+        self.cache = _DENSE_ADD_POS(self.cache, jnp.int32(slot),
+                                    jnp.int32(-n))
+
+    def reset_lane(self, slot: int) -> None:
+        self.cache = _DENSE_SET_POS(self.cache, jnp.int32(slot),
+                                    jnp.int32(0))
 
     def snapshot(self, slot: int) -> Optional[Any]:
         return None          # recompute policy: resume re-prefills
@@ -319,10 +395,80 @@ class RecurrentBackend(DenseBackend):
             lambda ax, s: int(np.prod(s.shape)) // (s.shape[ax] if ax >= 0 else 1)
             if ax >= 0 else 0, self._lane_ax, shapes))
         self.state_units = int(sum(sizes))
+        # speculative-rollback stash: host copy of the pre-window cache +
+        # the window tokens + params, and replayed prefixes memoized per
+        # kept length (several lanes rolling back the same amount after
+        # one verify round share one replay dispatch)
+        self._stash = None
+        self._stash_tokens: Optional[np.ndarray] = None
+        self._stash_params = None
+        self._replay_memo: dict = {}
+        self._zero_lane = None
 
     def token_footprint(self, n_ctx: int, max_new: int,
                         tokens: Optional[Sequence[int]] = None) -> int:
         return self.state_units     # independent of prompt/generation length
+
+    def step(self, params, tokens: np.ndarray, active: np.ndarray):
+        # extend the rollback record: single steps taken AFTER a verify
+        # window (the draft side of a speculative pair drafts this way)
+        # are part of the replayable history.  Memoized prefixes stay
+        # valid — appending columns never changes tokens[:, :keep].
+        if self._stash_tokens is not None:
+            self._stash_tokens = np.concatenate(
+                [self._stash_tokens, np.asarray(tokens)], axis=1)
+        return super().step(params, tokens, active)
+
+    # -- speculative verify plumbing -----------------------------------
+    def verify_step(self, params, tokens: np.ndarray, active: np.ndarray):
+        """Like the dense window, but rollback must be able to rebuild the
+        state as of any window prefix — recurrent state is not
+        position-addressed, so nothing can be 'un-written'.  Stash a HOST
+        copy of the pre-window cache (the window jit must therefore not
+        donate its cache argument) and replay from it on rollback."""
+        self._stash = jax.tree.map(np.asarray, self.cache)
+        self._stash_tokens = np.asarray(tokens)
+        self._stash_params = params
+        self._replay_memo = {}
+        if self._window is None:
+            self._window = _window_jit(self.model, False)
+        logits, self.cache = self._window(params, self.cache,
+                                          jnp.asarray(tokens))
+        return logits
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Rebuild the lane's state as of window position W - n by
+        replaying the kept prefix on the stashed pre-window cache, then
+        pasting that one lane into the live cache.  The replay runs the
+        FULL multi-lane batch (a 1-lane replay could drift bitwise via
+        batch-shape-dependent reduction order); a length-(W-n) scan of
+        the same body is bitwise identical to the first W-n iterations
+        of the length-W scan."""
+        if n <= 0:
+            return
+        if self._stash is None:
+            raise RuntimeError("rollback without a preceding verify_step")
+        keep = self._stash_tokens.shape[1] - n
+        if keep not in self._replay_memo:
+            pre = jax.tree.map(jnp.asarray, self._stash)
+            if keep <= 0:
+                self._replay_memo[keep] = pre
+            else:
+                _, replayed = self._window(
+                    self._stash_params, pre,
+                    jnp.asarray(self._stash_tokens[:, :keep]))
+                self._replay_memo[keep] = replayed
+        lane = self._extract(self._replay_memo[keep], jnp.int32(slot))
+        self.cache = self._paste(self.cache,
+                                 jax.tree.map(np.asarray, lane),
+                                 jnp.int32(0), jnp.int32(slot))
+
+    def reset_lane(self, slot: int) -> None:
+        if self._zero_lane is None:
+            self._zero_lane = jax.tree.map(
+                np.asarray, self.model.init_cache(1, self.max_len))
+        self.cache = self._paste(self.cache, self._zero_lane,
+                                 jnp.int32(0), jnp.int32(slot))
 
     def snapshot(self, slot: int) -> Any:
         snap = self._extract(self.cache, jnp.int32(slot))
@@ -353,6 +499,7 @@ class PagedBackend(CacheBackend):
         self._lane_blocks: List[List[int]] = [[] for _ in range(n_lanes)]
         self._lane_pos = np.zeros((n_lanes,), np.int64)
         self._decode = _pool_step_jit(ds)
+        self._pool_window = None     # built on first verify_step
         self._paste = _POOL_PASTE
         self._set_pos = _POOL_SET_POS
         self._cow_copy = _POOL_COW_COPY
@@ -539,6 +686,59 @@ class PagedBackend(CacheBackend):
                                           jnp.asarray(self.block_tables))
         self._lane_pos[active] += 1
         return logits
+
+    # -- speculative verify plumbing -----------------------------------
+    def append_tokens(self, slot: int, toks: Sequence[int]) -> bool:
+        """Reserve write capacity for ``len(toks)`` consecutive positions:
+        run the single-position ``prepare_lane`` (grow / COW-split /
+        uncache) once per position, crossing block boundaries as needed.
+        All-or-nothing: on exhaustion the position is restored and the
+        engine preempts a victim and retries."""
+        pos0 = int(self._lane_pos[slot])
+        for i in range(len(toks)):
+            self._lane_pos[slot] = pos0 + i
+            if not self.prepare_lane(slot):
+                self._lane_pos[slot] = pos0
+                return False
+        self._lane_pos[slot] = pos0
+        return True
+
+    def verify_step(self, params, tokens: np.ndarray, active: np.ndarray):
+        if self._pool_window is None:
+            self._pool_window = _pool_window_jit(self.model.decode_state)
+        w = tokens.shape[1]
+        logits, self.cache = self._pool_window(
+            params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.block_tables))
+        self._lane_pos[active] += w
+        return logits
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Truncate the lane's last ``n`` writes and free trailing blocks
+        it no longer covers.  Safe by construction: a verify round always
+        commits at least one token, so the post-rollback position sits
+        strictly past the pre-round content — every freed block is a
+        this-round private allocation (``append_tokens`` grows fresh or
+        COW-private blocks), never a shared/cached prefix block."""
+        if n <= 0:
+            return
+        bm = self.blocks
+        new_pos = max(0, int(self._lane_pos[slot]) - n)
+        self._lane_pos[slot] = new_pos
+        self.cache = self._set_pos(self.cache, jnp.int32(slot),
+                                   jnp.int32(new_pos))
+        blocks = self._lane_blocks[slot]
+        keep = bm.blocks_needed(new_pos)
+        if len(blocks) > keep:
+            tail = blocks[keep:]
+            del blocks[keep:]
+            bm.release(tail)
+            self.block_tables[slot, keep:] = 0
+
+    def reset_lane(self, slot: int) -> None:
+        self.release(slot)
+        self.cache = self._set_pos(self.cache, jnp.int32(slot),
+                                   jnp.int32(0))
 
     def snapshot(self, slot: int) -> Optional[Any]:
         return None          # recompute policy (resume prefix-matches the

@@ -64,8 +64,8 @@ import numpy as np
 from repro.models.api import Model
 from repro.serving.backends import INFEASIBLE, Reservation, make_backend
 from repro.serving.metrics import EngineSnapshot, MetricsCollector
-from repro.serving.sampling import (GREEDY, LaneSampling, SamplingParams,
-                                    sample_tokens)
+from repro.serving.sampling import (GREEDY, Sampler, SamplingParams,
+                                    resolve_sampling)
 from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
 
 
@@ -184,7 +184,10 @@ class ServeEngine:
                 f"real prompt K/V")
         self.max_prefill_batch = max(1, min(max_prefill_batch, max_batch))
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.lane_sampling = LaneSampling.empty(max_batch)
+        # the Sampler owns the per-lane filter + PRNG state; lane_sampling
+        # aliases its SoA arrays (pre-Sampler code paths mutate in place)
+        self.sampler = Sampler(max_batch)
+        self.lane_sampling = self.sampler.lanes
         self._rid = 0
         self.steps = 0
         self.finished: List[Request] = []
@@ -203,7 +206,14 @@ class ServeEngine:
                sampling: Optional[SamplingParams] = None, priority: int = 0,
                deadline_s: Optional[float] = None, **extra) -> Optional[int]:
         """Queue a request; returns its rid, or None if admission control
-        rejected it (queue at max_queue)."""
+        rejected it (queue at max_queue).
+
+        ``sampling`` (a :class:`SamplingParams`) is the single decode-policy
+        argument; loose ``temperature``/``top_k``/``top_p``/``seed`` kwargs
+        are accepted as a DEPRECATED shim (see
+        :func:`repro.serving.sampling.resolve_sampling`) — remaining
+        ``extra`` kwargs stay model inputs as before."""
+        sampling = resolve_sampling(sampling, extra)
         rid = self._rid
         self._rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new, extra,
@@ -315,16 +325,10 @@ class ServeEngine:
             ls.set_lane(slot, req.sampling)
             if req.saved_key is not None:     # resume: continue the stream
                 ls.key[slot] = req.saved_key
-        idx = np.asarray(slots)
-        toks, new_kd = sample_tokens(logits[:, :self.vocab],
-                                     jnp.asarray(ls.temperature[idx]),
-                                     jnp.asarray(ls.top_k[idx]),
-                                     jnp.asarray(ls.top_p[idx]),
-                                     jnp.asarray(ls.key[idx]))
-        toks, new_kd = np.asarray(toks), np.asarray(new_kd)
+        toks = self.sampler.sample(logits[:, :self.vocab],
+                                   lanes=np.asarray(slots))
         t_first = self._now()
         for j, ((req, res), slot) in enumerate(zip(items, slots)):
-            ls.key[slot] = new_kd[j]
             n_ctx = self._ctx_len(req)
             tok = int(toks[j])
             req.out_tokens.append(tok)
@@ -543,13 +547,7 @@ class ServeEngine:
         active = np.asarray([s is not None for s in self.slots])
         logits = self.backend.step(self.params, toks, active)
         ls = self.lane_sampling
-        nxt, new_kd = sample_tokens(logits[:, :self.vocab],
-                                    jnp.asarray(ls.temperature),
-                                    jnp.asarray(ls.top_k),
-                                    jnp.asarray(ls.top_p),
-                                    jnp.asarray(ls.key))
-        ls.key[:] = np.asarray(new_kd)
-        nxt = np.asarray(nxt)
+        nxt = self.sampler.sample(logits[:, :self.vocab])
         now = self._now()
         busy = self.active()          # before the finish-scan frees lanes
         for i, req in enumerate(self.slots):

@@ -69,6 +69,19 @@ elastic ``migrate`` action is reinterpreted for its group as
 **rebalance**: the split is re-cut from the members' derated rates, the
 moved layer params are charged over the link, and every lane resumes
 token-identically through the preempt/inject machinery.
+
+**Speculative pairs**: a :class:`SpecPair` welds a fast draft worker to a
+slow target worker into ONE serving unit running a
+:class:`~repro.serving.speculative.SpecEngine` — the draft member
+proposes ``spec_k`` tokens per round, the target member verifies them in
+one multi-token window, and BOTH directions of the token exchange cross
+as wire frames charged against ``min(link_bw)`` (transfers are never
+free).  The elastic ``migrate`` action on the DRAFT member means
+**colocate**: drafting falls back onto the target worker (draft compute
+charged there, link charges vanish) until every member cools, when the
+``undrain`` re-splits the pair.  ``migrate`` on the TARGET member drains
+the pair — the target holds the lanes and the big params; there is
+nowhere cheaper to verify.
 """
 
 from __future__ import annotations
@@ -88,12 +101,14 @@ from repro.models.api import Model
 from repro.runtime.elastic import Action, ServingElasticPolicy
 from repro.runtime.monitor import ThermalMonitor, ThermalState
 from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine_api import DecodeEngine
 from repro.serving.metrics import EngineSnapshot
 from repro.serving.pipeline_decode import (PipelineEngine, StepReport,
                                            decode_block_costs,
                                            stage_fixed_mem)
 from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import SchedulerConfig
+from repro.serving.speculative import SpecEngine, SpecReport
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +209,31 @@ class StageGroup:
     scheduler: Optional[SchedulerConfig] = None
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class SpecPair:
+    """A draft worker welded to a target worker for speculative decoding.
+
+    ``draft`` runs ``draft_model`` (a small same-vocab proposer whose
+    compute is charged at ``draft_share`` of a full decode step — default
+    its layer count over the target's); ``target`` runs the fleet model
+    and verifies ``spec_k``-token proposals in one window.  The pair
+    routes, drains and migrates as one unit under ``name``; members keep
+    their own thermal telemetry, duty cycles and throttle state.
+    ``eq=False``: params pytrees aren't hashable, identity semantics are
+    what a spec registry needs anyway.
+    """
+    name: str
+    draft: WorkerSpec
+    target: WorkerSpec
+    draft_model: Model
+    draft_params: object
+    spec_k: int = 3
+    draft_share: Optional[float] = None     # None = layer-count ratio
+    max_batch: int = 4
+    engine_config: Optional[EngineConfig] = None
+    scheduler: Optional[SchedulerConfig] = None
+
+
 @dataclasses.dataclass(frozen=True)
 class CompletedRecord:
     """A finished request with fleet-level context."""
@@ -242,6 +282,31 @@ class GroupSnapshot:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecSnapshot:
+    """One speculative pair's reading: acceptance, wire traffic, members.
+
+    Units: ``frame_bytes`` are wire-codec bytes charged to the pair's
+    link; ``transfer_s`` sim seconds the link was busy; acceptance
+    metrics live in ``engine`` (``spec_acceptance_rate`` etc.)."""
+    name: str
+    workers: Tuple[str, str]         # (draft, target) member names
+    spec_k: int
+    draft_share: float
+    engine: EngineSnapshot
+    completed: int
+    completed_tokens: int
+    goodput_tokens_per_s: float
+    rounds_run: int                  # draft->verify rounds fully PAID
+    drained: bool
+    colocated: bool                  # currently drafting on the target
+    colocations: int                 # times the pair fell back colocated
+    frame_bytes: int                 # drafted+sync bytes through the codec
+    transfer_s: float
+    link_stall_ticks: int
+    members: Dict[str, Dict]
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetSnapshot:
     sim_t: float
     ticks: int
@@ -259,6 +324,8 @@ class FleetSnapshot:
     expired: int
     per_worker: Dict[str, WorkerSnapshot]
     per_group: Dict[str, GroupSnapshot] = dataclasses.field(
+        default_factory=dict)
+    per_spec: Dict[str, SpecSnapshot] = dataclasses.field(
         default_factory=dict)
     recuts: int = 0                  # stage-group rebalances applied
     probes: int = 0                  # paced recovery probes across the fleet
@@ -291,9 +358,14 @@ class _Paced:
 
 
 class _Worker(_Paced):
-    """Mutable runtime state the fleet keeps per replica WorkerSpec."""
+    """Mutable runtime state the fleet keeps per replica WorkerSpec.
 
-    def __init__(self, spec: WorkerSpec, engine: ServeEngine):
+    The fleet drives ``engine`` strictly through the
+    :class:`~repro.serving.engine_api.DecodeEngine` protocol surface —
+    any conforming engine routes, migrates and snapshots the same way
+    (the replica builder instantiates :class:`ServeEngine`)."""
+
+    def __init__(self, spec: WorkerSpec, engine: DecodeEngine):
         super().__init__(spec)
         self.engine = engine
         self.rate = spec.profile.decode_rate()
@@ -380,7 +452,58 @@ class _GroupRuntime:
             or self.engine.scheduler.depth > 0
 
 
-_Routable = Union[_Worker, _GroupRuntime]
+class _SpecRuntime:
+    """Runtime state of one SpecPair: engine, (draft, target) members,
+    charge queue.  Pacing mirrors :class:`_GroupRuntime`: every
+    eagerly-executed engine round becomes an ordered charge list — draft
+    compute on member 0, the drafted-token frame's flight, verify compute
+    on member 1, the sync frame back — and the queue drains as members
+    earn compute credit and the link earns wire time."""
+
+    def __init__(self, spec: SpecPair, engine: SpecEngine,
+                 members: List[_Paced], draft_share: float):
+        self.spec = spec
+        self.engine = engine
+        self.members = members           # [draft, target]
+        self.draft_share = draft_share
+        self.drained = False
+        self.n_collected = 0
+        self.steps_run = 0               # rounds fully paid in sim time
+        self.pending: Deque[_Charge] = collections.deque()
+        self.link_acc = 0.0
+        self.transfer_s = 0.0
+        self.frame_bytes = 0
+        self.link_stall_ticks = 0
+        self.colocations = 0
+        d, t = (m.spec.profile for m in members)
+        self.link_bw = min(d.link_bw, t.link_bw)
+        # routing rate: tokens/s of a cold round at FULL acceptance — the
+        # optimistic bound plays the same role decode_rate() plays for a
+        # plain worker (backlog comparison, not billing)
+        k = spec.spec_k
+        round_cold = ((k + 1) * draft_share / d.decode_rate()
+                      + 1.0 / t.decode_rate() + k / t.prefill_rate())
+        self.rate = (k + 1) / round_cold
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def set_colocated(self, flag: bool) -> None:
+        if flag and not self.engine.colocated:
+            self.colocations += 1
+        self.engine.colocated = flag
+
+    def free_fraction(self) -> float:
+        eng = self.engine
+        return (eng.max_batch - eng.active()) / eng.max_batch
+
+    def busy(self) -> bool:
+        return bool(self.pending) or self.engine.active() > 0 \
+            or self.engine.scheduler.depth > 0
+
+
+_Routable = Union[_Worker, _GroupRuntime, _SpecRuntime]
 
 
 class ServingFleet:
@@ -397,6 +520,7 @@ class ServingFleet:
     def __init__(self, model: Model, params,
                  workers: Sequence[WorkerSpec] = (), *,
                  groups: Sequence[StageGroup] = (),
+                 spec_pairs: Sequence[SpecPair] = (),
                  max_len: int = 64,
                  tick_s: float = 0.05,
                  monitor: Optional[ThermalMonitor] = None,
@@ -408,10 +532,14 @@ class ServingFleet:
                  thermal_routing: bool = True,
                  telemetry: str = "sim",
                  probe_every_s: float = 0.25):
-        if not workers and not groups:
-            raise ValueError("a fleet needs at least one worker or group")
+        if not workers and not groups and not spec_pairs:
+            raise ValueError(
+                "a fleet needs at least one worker, group or spec pair")
         names = ([w.name for w in workers] + [g.name for g in groups]
-                 + [m.name for g in groups for m in g.workers])
+                 + [m.name for g in groups for m in g.workers]
+                 + [p.name for p in spec_pairs]
+                 + [m.name for p in spec_pairs
+                    for m in (p.draft, p.target)])
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate worker/group names: {names}")
         if telemetry not in ("sim", "wall"):
@@ -443,8 +571,16 @@ class ServingFleet:
             self.groups.append(g)
             for m in g.members:
                 self._member_group[m.name] = g
+        self.spec_pairs: List[_SpecRuntime] = []
+        self._member_spec: Dict[str, _SpecRuntime] = {}
+        for pspec in spec_pairs:
+            s = self._build_spec(model, params, pspec, max_len, scheduler)
+            self.spec_pairs.append(s)
+            for m in s.members:
+                self._member_spec[m.name] = s
         self._by_name: Dict[str, _Routable] = {
-            u.name: u for u in (*self.workers, *self.groups)}
+            u.name: u for u in (*self.workers, *self.groups,
+                                *self.spec_pairs)}
         self.sim_t = 0.0
         self.ticks = 0
         self._rid = 0
@@ -485,6 +621,21 @@ class ServingFleet:
         members = [_Paced(w) for w in gspec.workers]
         return _GroupRuntime(gspec, eng, members, costs, fixed)
 
+    def _build_spec(self, model: Model, params, pspec: SpecPair,
+                    max_len: int,
+                    scheduler: Optional[SchedulerConfig]) -> _SpecRuntime:
+        eng = SpecEngine(model, params, pspec.draft_model,
+                         pspec.draft_params, max_batch=pspec.max_batch,
+                         max_len=max_len, spec_k=pspec.spec_k,
+                         scheduler=pspec.scheduler or scheduler,
+                         config=pspec.engine_config, clock=self._sim_now)
+        share = pspec.draft_share
+        if share is None:
+            share = (pspec.draft_model.cfg.n_layers
+                     / max(model.cfg.n_layers, 1))
+        members = [_Paced(pspec.draft), _Paced(pspec.target)]
+        return _SpecRuntime(pspec, eng, members, share)
+
     # ------------------------------------------------------------------
     # admission routing
     # ------------------------------------------------------------------
@@ -503,9 +654,9 @@ class ServingFleet:
         return order.index(ws.state) if ws else 0
 
     def _unit_rank(self, u: _Routable) -> int:
-        """A group is as hot as its hottest member: one throttled stage
-        throttles every lane spanning it."""
-        if isinstance(u, _GroupRuntime):
+        """A group/pair is as hot as its hottest member: one throttled
+        stage (or the verify side) throttles every lane spanning it."""
+        if isinstance(u, (_GroupRuntime, _SpecRuntime)):
             return max(self._state_rank(m.name) for m in u.members)
         return self._state_rank(u.name)
 
@@ -515,7 +666,8 @@ class ServingFleet:
         shortest estimated backlog (queued + active work over the unit's
         cold rate), then most free backend capacity.  All-drained fleets
         fall back to every unit — admissions queue rather than vanish."""
-        units: List[_Routable] = [*self.workers, *self.groups]
+        units: List[_Routable] = [*self.workers, *self.groups,
+                                  *self.spec_pairs]
         cands = [u for u in units if u is not exclude and not u.drained]
         if not cands:
             cands = [u for u in units if u is not exclude]
@@ -729,6 +881,123 @@ class ServingFleet:
                                               sim_step)
             m.util = min(busy[i] / self.tick_s, 1.0)
 
+    # -- speculative pairs ---------------------------------------------
+    def _spec_costs(self, s: _SpecRuntime) -> Tuple[float, float]:
+        """Cold seconds of one round's (draft, verify) compute charges.
+        Draft: k+1 token-steps (catch-up + k proposals) at the draft's
+        layer share, on whichever member is currently drafting.  Verify:
+        one decode step plus k extra window positions priced at the
+        target's prefill rate (the window is one scanned dispatch, not
+        k+1 separate decode steps — that IS the speedup)."""
+        k = s.spec.spec_k
+        di = 1 if s.engine.colocated else 0
+        dprof = s.members[di].spec.profile
+        tprof = s.members[1].spec.profile
+        draft_s = (k + 1) * s.draft_share / dprof.decode_rate()
+        verify_s = 1.0 / tprof.decode_rate() + k / tprof.prefill_rate()
+        return draft_s, verify_s
+
+    def _charges_for_spec(self, s: _SpecRuntime,
+                          rep: SpecReport) -> List[_Charge]:
+        """One eagerly-executed speculative round as ordered sim-time
+        costs: admission prefills, draft compute, the drafted-token frame
+        d->t, the verify window, the emitted/PRNG sync frame t->d, then
+        the free commit marker.  Colocated pairs charge draft compute on
+        the TARGET member (idx 1) and ship no frames (the report's byte
+        counts are already zero)."""
+        out: List[_Charge] = []
+        di = 1 if s.engine.colocated else 0
+        dprof = s.members[di].spec.profile
+        tprof = s.members[1].spec.profile
+        if rep.target_prefill_tokens:
+            out.append(_Charge(
+                "stage", 1,
+                rep.target_prefill_tokens / tprof.prefill_rate()))
+        if rep.draft_prefill_tokens:
+            out.append(_Charge(
+                "stage", di, rep.draft_prefill_tokens * s.draft_share
+                / dprof.prefill_rate()))
+        if rep.n_active:
+            draft_s, verify_s = self._spec_costs(s)
+            out.append(_Charge("stage", di, draft_s))
+            if rep.d2t_frame_bytes:
+                s.frame_bytes += rep.d2t_frame_bytes
+                out.append(_Charge(
+                    "link", 0, rep.d2t_frame_bytes / s.link_bw))
+            out.append(_Charge("stage", 1, verify_s))
+            if rep.t2d_frame_bytes:
+                s.frame_bytes += rep.t2d_frame_bytes
+                out.append(_Charge(
+                    "link", 0, rep.t2d_frame_bytes / s.link_bw))
+        out.append(_Charge("commit", 0, 0.0))
+        return out
+
+    def _advance_spec(self, s: _SpecRuntime) -> None:
+        """One tick of a spec pair: same charge-queue drain as a stage
+        group — draft compute, frame flight, verify compute, frame
+        flight, commit — with frames crossing ticks when they outrun the
+        link budget."""
+        for m in s.members:
+            m.slowdown = self.throttle.advance(m.name, self.tick_s, m.util)
+            m.acc_s = min(m.acc_s + self.tick_s * m.duty, self.tick_s)
+        s.link_acc = min(s.link_acc + self.tick_s, self.tick_s)
+        busy = [0.0] * len(s.members)
+        ran = [0] * len(s.members)
+        while True:
+            if s.pending:
+                ch = s.pending[0]
+                if ch.kind == "stage":
+                    m = s.members[ch.idx]
+                    cost_now = ch.remaining * m.slowdown
+                    pay = min(cost_now, m.acc_s)
+                    m.acc_s -= pay
+                    busy[ch.idx] += pay
+                    ch.remaining -= pay / m.slowdown if m.slowdown else pay
+                    if ch.remaining > 1e-12:
+                        break
+                    s.pending.popleft()
+                    m.steps_run += 1
+                    ran[ch.idx] += 1
+                elif ch.kind == "link":
+                    pay = min(ch.remaining, s.link_acc)
+                    s.link_acc -= pay
+                    s.transfer_s += pay
+                    ch.remaining -= pay
+                    if ch.remaining > 1e-12:
+                        s.link_stall_ticks += 1
+                        break
+                    s.pending.popleft()
+                else:                            # commit: results visible
+                    s.pending.popleft()
+                    s.steps_run += 1
+                    self._collect_finished(s)
+                continue
+            if not (s.engine.active() or s.engine.scheduler.depth):
+                break
+            if all(m.acc_s <= 1e-12 for m in s.members):
+                break
+            t0 = time.perf_counter()
+            rep = s.engine.step_paced()
+            wall = time.perf_counter() - t0
+            if (rep.n_active == 0 and not rep.target_prefill_tokens
+                    and not rep.draft_prefill_tokens):
+                break
+            # wall-telemetry feed: split the measured round time by the
+            # members' cold-cost shares (one process runs both sides)
+            draft_s, verify_s = self._spec_costs(s)
+            tot = draft_s + verify_s
+            s.members[0].last_wall_step_s = wall * draft_s / tot
+            s.members[1].last_wall_step_s = wall * verify_s / tot
+            s.pending.extend(self._charges_for_spec(s, rep))
+        draft_s, verify_s = self._spec_costs(s)
+        for i, m in enumerate(s.members):
+            sim_step = (draft_s, verify_s)[i] * m.slowdown
+            reading = m.last_wall_step_s if self.telemetry == "wall" \
+                else sim_step
+            busy[i] += self._observe_or_probe(m, ran[i] > 0, reading,
+                                              sim_step)
+            m.util = min(busy[i] / self.tick_s, 1.0)
+
     def tick(self) -> None:
         """Advance simulated time by ``tick_s``: run every worker's and
         group's share of work, feed telemetry, then apply policy
@@ -739,13 +1008,16 @@ class ServingFleet:
             self._advance_worker(w)
         for g in self.groups:
             self._advance_group(g)
+        for s in self.spec_pairs:
+            self._advance_spec(s)
         if self.policy is not None:
             actions = self.policy.step(self.monitor)
             # duty is re-asserted every tick while a worker is hot; a
             # worker the policy stopped mentioning runs full-duty again
             asserted = {a.worker for a in actions if a.kind == "duty_cycle"}
             for p in (*self.workers,
-                      *(m for g in self.groups for m in g.members)):
+                      *(m for g in self.groups for m in g.members),
+                      *(m for s in self.spec_pairs for m in s.members)):
                 if p.name not in asserted:
                     p.duty = 1.0
             self._apply(actions)
@@ -753,7 +1025,8 @@ class ServingFleet:
     def idle(self) -> bool:
         return (all(not w.engine.active() and not w.engine.scheduler.depth
                     for w in self.workers)
-                and all(not g.busy() for g in self.groups))
+                and all(not g.busy() for g in self.groups)
+                and all(not s.busy() for s in self.spec_pairs))
 
     def run_until_drained(self, max_ticks: int = 100_000
                           ) -> List[CompletedRecord]:
@@ -913,11 +1186,39 @@ class ServingFleet:
         elif a.kind == "migrate":
             self.rebalance(g.name)
 
+    def _apply_spec_member(self, s: _SpecRuntime, a: Action) -> None:
+        """Policy actions on a spec-pair member act on the pair: duty
+        stays per-member, drain/undrain drain the pair's admissions, and
+        migrate splits by role — a hot DRAFT member COLOCATES (drafting
+        falls back onto the target, so the phone can cool while the pair
+        keeps its speculative speedup mechanics), while a hot TARGET
+        member drains the pair (the target holds the lanes and the full
+        params; verify has nowhere cheaper to go).  Undrain — gated on
+        EVERY member cooling — re-splits a colocated pair."""
+        if a.kind == "duty_cycle":
+            next(m for m in s.members
+                 if m.name == a.worker).duty = a.detail["duty"]
+        elif a.kind == "drain":
+            self.drain(s.name)
+        elif a.kind == "undrain":
+            if all(self._state_rank(m.name) == 0 for m in s.members):
+                self.undrain(s.name)
+                s.set_colocated(False)
+        elif a.kind == "migrate":
+            if a.worker == s.members[0].name:
+                s.set_colocated(True)
+            else:
+                self.drain(s.name)
+
     def _apply(self, actions: Sequence[Action]) -> None:
         for a in actions:
             if a.worker in self._member_group:
                 self.action_log.append((self.sim_t, a))
                 self._apply_member(self._member_group[a.worker], a)
+                continue
+            if a.worker in self._member_spec:
+                self.action_log.append((self.sim_t, a))
+                self._apply_spec_member(self._member_spec[a.worker], a)
                 continue
             if a.worker not in self._by_name:
                 # a shared ThermalMonitor may track non-fleet workers
@@ -996,8 +1297,44 @@ class ServingFleet:
                 link_stall_ticks=g.link_stall_ticks,
                 members=members,
             )
+        per_spec: Dict[str, SpecSnapshot] = {}
+        for s in self.spec_pairs:
+            recs = [r for r in self.completed if r.worker == s.name]
+            toks = sum(len(r.req.out_tokens) for r in recs)
+            members = {}
+            for m in s.members:
+                ws = self.monitor.workers.get(m.name)
+                members[m.name] = {
+                    "profile": m.spec.profile.name,
+                    "duty": m.duty,
+                    "slowdown": m.slowdown,
+                    "util": m.util,
+                    "probes": m.probes,
+                    "thermal_state": (ws.state.value if ws
+                                      else ThermalState.MINIMAL.value),
+                    "state_occupancy": occ.get(m.name, {}),
+                }
+            per_spec[s.name] = SpecSnapshot(
+                name=s.name,
+                workers=(s.members[0].name, s.members[1].name),
+                spec_k=s.spec.spec_k,
+                draft_share=s.draft_share,
+                engine=s.engine.metrics_snapshot(),
+                completed=len(recs),
+                completed_tokens=toks,
+                goodput_tokens_per_s=toks / sim,
+                rounds_run=s.steps_run,
+                drained=s.drained,
+                colocated=s.engine.colocated,
+                colocations=s.colocations,
+                frame_bytes=s.frame_bytes,
+                transfer_s=s.transfer_s,
+                link_stall_ticks=s.link_stall_ticks,
+                members=members,
+            )
         total_tokens = sum(len(r.req.out_tokens) for r in self.completed)
-        units: List[_Routable] = [*self.workers, *self.groups]
+        units: List[_Routable] = [*self.workers, *self.groups,
+                                  *self.spec_pairs]
         return FleetSnapshot(
             sim_t=self.sim_t,
             ticks=self.ticks,
@@ -1014,12 +1351,16 @@ class ServingFleet:
             expired=sum(u.engine.scheduler.expired_total for u in units),
             per_worker=per_worker,
             per_group=per_group,
+            per_spec=per_spec,
             recuts=self.recuts,
             probes=sum(w.probes for w in self.workers)
-            + sum(m.probes for g in self.groups for m in g.members),
+            + sum(m.probes for g in self.groups for m in g.members)
+            + sum(m.probes for s in self.spec_pairs for m in s.members),
             transfer_bytes=sum(g.frame_bytes + g.recut_bytes
-                               for g in self.groups),
-            transfer_s=sum(g.transfer_s for g in self.groups),
+                               for g in self.groups)
+            + sum(s.frame_bytes for s in self.spec_pairs),
+            transfer_s=sum(g.transfer_s for g in self.groups)
+            + sum(s.transfer_s for s in self.spec_pairs),
         )
 
 

@@ -86,6 +86,12 @@ class EngineSnapshot:
     cow_splits: int                    # shared blocks privatised on write
     kv_shared_blocks_peak: int         # high-watermark refcount>=2 blocks
     cache_evictions: int               # cached free blocks reclaimed
+    # speculative-decoding accounting (zero on non-speculative engines)
+    spec_rounds: int = 0               # draft->verify rounds run
+    spec_drafted_tokens: int = 0       # draft proposals shipped to verify
+    spec_accepted_tokens: int = 0      # proposals the target agreed with
+    spec_acceptance_rate: float = 0.0  # accepted / drafted (token-weighted)
+    spec_accepted_series: Tuple[int, ...] = ()  # accepted count per round
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -114,6 +120,10 @@ class MetricsCollector:
         self.prefix_query_tokens = 0
         self.prefix_hit_series: List[float] = []
         self.prefill_skipped = 0
+        self.spec_rounds = 0
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_accepted_series: List[int] = []
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -140,6 +150,14 @@ class MetricsCollector:
 
     def on_prefill_skip(self) -> None:
         self.prefill_skipped += 1
+
+    def on_spec_round(self, drafted: int, accepted: int) -> None:
+        """One speculative round: ``drafted`` proposals were verified,
+        ``accepted`` of them matched the target's own samples."""
+        self.spec_rounds += 1
+        self.spec_drafted_tokens += drafted
+        self.spec_accepted_tokens += accepted
+        self.spec_accepted_series.append(accepted)
 
     def on_resume(self, req, now: float) -> None:
         self.resumes += 1
@@ -210,4 +228,11 @@ class MetricsCollector:
             cow_splits=cow_splits,
             kv_shared_blocks_peak=kv_shared_blocks_peak,
             cache_evictions=cache_evictions,
+            spec_rounds=self.spec_rounds,
+            spec_drafted_tokens=self.spec_drafted_tokens,
+            spec_accepted_tokens=self.spec_accepted_tokens,
+            spec_acceptance_rate=(
+                self.spec_accepted_tokens / self.spec_drafted_tokens
+                if self.spec_drafted_tokens else 0.0),
+            spec_accepted_series=tuple(self.spec_accepted_series),
         )

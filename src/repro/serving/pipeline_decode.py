@@ -59,8 +59,8 @@ from repro.models.api import (Model, param_bytes, split_stage_params,
 from repro.serving.backends import make_backend
 from repro.serving.engine import EngineConfig, Request, _shared_prefill_jits
 from repro.serving.metrics import EngineSnapshot, MetricsCollector
-from repro.serving.sampling import (GREEDY, LaneSampling, SamplingParams,
-                                    sample_tokens)
+from repro.serving.sampling import (GREEDY, Sampler, SamplingParams,
+                                    resolve_sampling)
 from repro.serving.scheduler import AdmissionScheduler, SchedulerConfig
 from repro.wire import codec
 
@@ -181,7 +181,9 @@ class PipelineEngine:
         self.vocab = int(model.cfg.vocab_size)
         self.scheduler = AdmissionScheduler(scheduler)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.lane_sampling = LaneSampling.empty(max_batch)
+        self.sampler = Sampler(max_batch)
+        # legacy alias: fleet/preempt code reads lane arrays through here
+        self.lane_sampling = self.sampler.lanes
         self._rid = 0
         self.steps = 0
         self.recuts = 0
@@ -224,6 +226,7 @@ class PipelineEngine:
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                sampling: Optional[SamplingParams] = None, priority: int = 0,
                deadline_s: Optional[float] = None, **extra) -> Optional[int]:
+        sampling = resolve_sampling(sampling, extra)
         if extra:
             raise ValueError(
                 "pipeline-split lanes carry tokens and boundary hidden "
@@ -330,17 +333,11 @@ class PipelineEngine:
         self.metrics.on_prefill(1, n_ctx)
 
         ls = self.lane_sampling
-        ls.set_lane(slot, req.sampling)
+        self.sampler.set_lane(slot, req.sampling)
         if req.saved_key is not None:
             ls.key[slot] = req.saved_key
-        idx = np.asarray([slot])
-        toks, new_kd = sample_tokens(out[:, :self.vocab],
-                                     jnp.asarray(ls.temperature[idx]),
-                                     jnp.asarray(ls.top_k[idx]),
-                                     jnp.asarray(ls.top_p[idx]),
-                                     jnp.asarray(ls.key[idx]))
-        ls.key[slot] = np.asarray(new_kd)[0]
-        tok = int(np.asarray(toks)[0])
+        tok = int(self.sampler.sample(np.asarray(out)[:, :self.vocab],
+                                      lanes=[slot])[0])
         t_first = self._now()
         req.out_tokens.append(tok)
         if req.admitted_t is None:
@@ -446,13 +443,7 @@ class PipelineEngine:
                 x, nb = self._ship(out, prefill=False)
                 rep.decode_frame_bytes.append(nb)
         ls = self.lane_sampling
-        nxt, new_kd = sample_tokens(out[:, :self.vocab],
-                                    jnp.asarray(ls.temperature),
-                                    jnp.asarray(ls.top_k),
-                                    jnp.asarray(ls.top_p),
-                                    jnp.asarray(ls.key))
-        ls.key[:] = np.asarray(new_kd)
-        nxt = np.asarray(nxt)
+        nxt = self.sampler.sample(np.asarray(out)[:, :self.vocab])
         now = self._now()
         busy = self.active()
         for i, req in enumerate(self.slots):

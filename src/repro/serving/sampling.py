@@ -23,6 +23,8 @@ never change a request's sampled tokens.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -136,3 +138,148 @@ def _sample_tokens(logits: jax.Array, temperature: jax.Array,
 
 
 sample_tokens = jax.jit(_sample_tokens)
+
+
+def _sample_tokens_masked(logits, temperature, top_k, top_p, key_data, mask):
+    """:func:`_sample_tokens` with a lane mask: masked-out lanes keep their
+    PRNG stream untouched (their returned token is garbage).  The
+    speculative accept loop needs this — a lane that already ended its
+    round must not consume key splits for window positions it never
+    reaches, or its stream would diverge from the baseline engine's."""
+    tokens, new_kd = _sample_tokens(logits, temperature, top_k, top_p,
+                                    key_data)
+    new_kd = jnp.where(mask[:, None], new_kd, key_data)
+    return tokens, new_kd
+
+
+sample_tokens_masked = jax.jit(_sample_tokens_masked)
+
+
+def resolve_sampling(sampling: Optional[SamplingParams],
+                     extra: dict) -> Optional[SamplingParams]:
+    """Resolve an engine ``submit``'s decode policy.
+
+    ``SamplingParams`` is the single supported argument; the loose
+    ``temperature=`` / ``top_k=`` / ``top_p=`` / ``seed=`` kwargs of the
+    pre-Sampler API are kept as a DEPRECATED shim — popped out of
+    ``extra`` (mutating it, so leftovers keep their existing meaning) and
+    folded into an equivalent ``SamplingParams``.  Mixing both is an
+    error rather than a silent precedence rule.
+    """
+    legacy = {k: extra.pop(k) for k in ("temperature", "top_k", "top_p",
+                                        "seed") if k in extra}
+    if not legacy:
+        return sampling
+    if sampling is not None:
+        raise TypeError(
+            f"pass decode policy either as sampling=SamplingParams(...) or "
+            f"as legacy kwargs, not both (got sampling= and {sorted(legacy)})")
+    warnings.warn(
+        "loose temperature/top_k/top_p/seed kwargs are deprecated; pass "
+        "sampling=SamplingParams(...)", DeprecationWarning, stacklevel=3)
+    return SamplingParams(**legacy)
+
+
+class Sampler:
+    """Owns the per-lane filter + PRNG state and both sampling entry
+    points — the plain engine's one-token :meth:`sample` and the
+    speculative engine's window :meth:`accept` share this object, so the
+    speculative path cannot drift from the baseline discipline.
+
+    The state is the same :class:`LaneSampling` SoA the engine always
+    kept (exposed as ``.lanes`` — engine/fleet code that snapshots a
+    lane's key for preemption keeps working on the arrays in place).
+    """
+
+    def __init__(self, n_lanes: int):
+        self.n_lanes = n_lanes
+        self.lanes = LaneSampling.empty(n_lanes)
+
+    # -- lane state ----------------------------------------------------
+    def set_lane(self, lane: int, params: SamplingParams) -> None:
+        self.lanes.set_lane(lane, params)
+
+    def clear_lane(self, lane: int) -> None:
+        self.lanes.clear_lane(lane)
+
+    def copy_state_from(self, other: "Sampler") -> None:
+        """Adopt ``other``'s full lane state (filters + PRNG counters) —
+        the draft sampler mirrors the target sampler at the start of
+        every speculative round, so a perfectly-aligned draft model
+        proposes exactly what the target would sample."""
+        np.copyto(self.lanes.temperature, other.lanes.temperature)
+        np.copyto(self.lanes.top_k, other.lanes.top_k)
+        np.copyto(self.lanes.top_p, other.lanes.top_p)
+        np.copyto(self.lanes.key, other.lanes.key)
+
+    # -- sampling ------------------------------------------------------
+    def sample(self, logits, lanes: Optional[Sequence[int]] = None,
+               mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Sample one token per row of ``logits`` and advance the rows'
+        PRNG streams in place.  ``lanes`` maps rows to lane indices
+        (default: row i is lane i); ``mask`` freezes masked-out lanes'
+        streams (their tokens are garbage)."""
+        ls = self.lanes
+        idx = (np.arange(logits.shape[0]) if lanes is None
+               else np.asarray(lanes))
+        args = (jnp.asarray(ls.temperature[idx]), jnp.asarray(ls.top_k[idx]),
+                jnp.asarray(ls.top_p[idx]), jnp.asarray(ls.key[idx]))
+        if mask is None:
+            toks, new_kd = sample_tokens(jnp.asarray(logits), *args)
+        else:
+            toks, new_kd = sample_tokens_masked(
+                jnp.asarray(logits), *args, jnp.asarray(mask))
+        ls.key[idx] = np.asarray(new_kd)
+        return np.asarray(toks)
+
+    def accept(self, window_logits, drafted: np.ndarray,
+               active: np.ndarray, limit: Sequence[int],
+               eos_id: Optional[int] = None
+               ) -> Tuple[List[List[int]], np.ndarray, np.ndarray]:
+        """Coupled acceptance over one verify window.
+
+        ``window_logits`` (B, W, V) are the target's logits after each of
+        the W = k + 1 window tokens; ``drafted`` (B, k) the draft's
+        proposals; ``active`` (B,) which lanes ran the round; ``limit``
+        (B,) tokens each lane may still emit; ``eos_id`` ends a lane.
+
+        Position j's logits are sampled from the TARGET's filtered
+        distribution via the lane's frozen stream — exactly the token the
+        baseline engine would emit next — and the lane continues past j
+        iff that token equals ``drafted[:, j]``.  The draft therefore
+        only ever controls how FAR a round reaches, never what is
+        emitted: the output stream is bit-for-bit the baseline stream
+        for greedy AND stochastic targets, and each lane consumes
+        exactly one key split per emitted token (masked sampling), so
+        preempt/resume identity is preserved mid-round.
+
+        Returns (per-lane emitted tokens, n_emitted (B,), n_accepted
+        (B,) drafted tokens matched).  With k = 1 and an always-ending
+        first position this reduces to the baseline sampler exactly.
+        """
+        b, w, _ = np.asarray(window_logits).shape
+        k = w - 1
+        alive = np.asarray(active, bool).copy()
+        emitted: List[List[int]] = [[] for _ in range(b)]
+        n_acc = np.zeros(b, np.int64)
+        limit = np.asarray(limit)
+        for j in range(w):
+            if not alive.any():
+                break
+            toks = self.sample(window_logits[:, j], mask=alive)
+            for i in range(b):
+                if not alive[i]:
+                    continue
+                t = int(toks[i])
+                emitted[i].append(t)
+                done = (len(emitted[i]) >= limit[i]
+                        or (eos_id is not None and t == eos_id))
+                # a drafted token the target also sampled is ACCEPTED even
+                # when the lane ends here (limit/eos) — done controls
+                # continuation, not the proposal's correctness
+                if j < k and t == int(drafted[i, j]):
+                    n_acc[i] += 1
+                if j == k or done or t != int(drafted[i, j]):
+                    alive[i] = False
+        n_emitted = np.array([len(e) for e in emitted], np.int64)
+        return emitted, n_emitted, n_acc

@@ -1,0 +1,317 @@
+"""Speculative decoding: coupled acceptance, rollback identity, fleet pairs.
+
+The load-bearing claim everywhere here is BIT-FOR-BIT equality with the
+plain engine: the draft only decides how far a round reaches, never what
+is emitted, so every test reduces to "same requests in, identical token
+streams out" — for greedy and stochastic lanes, across dense / paged /
+recurrent backends, through preemption, and through the fleet wire plane.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.models.api import build_model
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.engine_api import REQUIRED_ATTRS, DecodeEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.speculative import SpecEngine
+
+RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+STOCH = SamplingParams(temperature=8.0, top_k=64, seed=11)
+STOCH2 = SamplingParams(temperature=8.0, top_k=64, seed=99)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    model = build_model(cfg, RCFG)
+    return model, model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def misaligned_draft(small_lm):
+    """A 1-layer draft with its OWN weights: proposals mostly miss, so
+    every round exercises rejection + rollback."""
+    model, _ = small_lm
+    cfg = dataclasses.replace(model.cfg, n_layers=1)
+    draft = build_model(cfg, RCFG)
+    return draft, draft.init(jax.random.key(3))
+
+
+@pytest.fixture(scope="module")
+def aligned_lm(small_lm):
+    """Target with layer 1's output projections zeroed (exact residual
+    identity) + the 1-layer prefix as draft: bitwise-equal logits, so the
+    draft proposes exactly what the target samples (acceptance 1.0)."""
+    model, params = small_lm
+    tp = {"embed": params["embed"], "final_ln": params["final_ln"],
+          "blocks": dict(params["blocks"])}
+    tp["blocks"] = jax.tree_util.tree_map(lambda x: x, params["blocks"])
+    for mod, name in (("attn", "wo"), ("mlp", "wo")):
+        w = np.asarray(tp["blocks"][mod][name]).copy()
+        w[1:] = 0.0
+        tp["blocks"][mod][name] = jnp.asarray(w)
+    dcfg = dataclasses.replace(model.cfg, n_layers=1)
+    draft = build_model(dcfg, RCFG)
+    dp = {"embed": tp["embed"], "final_ln": tp["final_ln"],
+          "blocks": jax.tree_util.tree_map(lambda x: x[:1], tp["blocks"])}
+    return model, tp, draft, dp
+
+
+def _prompts(vocab, sizes=(6, 3, 9, 1, 5), seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n).tolist() for n in sizes]
+
+
+def _run(engine, prompts, samplings, max_new=10):
+    rids = [engine.submit(p, max_new=max_new, sampling=s)
+            for p, s in zip(prompts, samplings)]
+    engine.run_until_drained()
+    done = {r.rid: list(r.out_tokens) for r in engine.finished}
+    return [done[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# DecodeEngine conformance
+# ---------------------------------------------------------------------------
+
+def test_decode_engine_conformance(small_lm, misaligned_draft):
+    from repro.serving.pipeline_decode import PipelineEngine
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    engines = [
+        ServeEngine(model, params, max_batch=2, max_len=32),
+        PipelineEngine(model, params, max_batch=2, max_len=32, cuts=[1]),
+        SpecEngine(model, params, draft, dparams, max_batch=2, max_len=32),
+    ]
+    for eng in engines:
+        assert isinstance(eng, DecodeEngine), type(eng)
+        for attr in REQUIRED_ATTRS:
+            assert hasattr(eng, attr), (type(eng), attr)
+
+
+# ---------------------------------------------------------------------------
+# identity with the plain engine
+# ---------------------------------------------------------------------------
+
+def test_spec_k1_reduces_to_baseline(small_lm, misaligned_draft):
+    """k=1 is the degenerate round: one proposal, one verify position."""
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    prompts = _prompts(model.cfg.vocab_size)
+    samp = [None, STOCH, None, STOCH2, None]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp)
+    got = _run(SpecEngine(model, params, draft, dparams, max_batch=4,
+                          max_len=48, spec_k=1), prompts, samp)
+    assert got == ref
+
+
+def test_spec_identity_dense_misaligned(small_lm, misaligned_draft):
+    """Greedy + stochastic lanes, k=3, a draft that mostly misses: the
+    emitted streams still match the plain engine bit-for-bit, and the
+    acceptance metrics show real rejections happened."""
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    prompts = _prompts(model.cfg.vocab_size)
+    samp = [None, STOCH, None, STOCH2, None]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp)
+    eng = SpecEngine(model, params, draft, dparams, max_batch=4, max_len=48,
+                     spec_k=3)
+    got = _run(eng, prompts, samp)
+    assert got == ref
+    snap = eng.metrics_snapshot()
+    assert snap.spec_rounds > 0
+    assert 0.0 <= snap.spec_acceptance_rate < 1.0
+    assert len(snap.spec_accepted_series) == snap.spec_rounds
+
+
+def test_spec_aligned_draft_accepts_everything(aligned_lm):
+    """A bitwise-aligned draft is accepted wholesale — greedy AND
+    stochastic — and rounds emit more than one token each."""
+    model, params, draft, dparams = aligned_lm
+    prompts = _prompts(model.cfg.vocab_size)
+    samp = [None, STOCH, None, STOCH2, None]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp, max_new=12)
+    eng = SpecEngine(model, params, draft, dparams, max_batch=4, max_len=48,
+                     spec_k=3)
+    got = _run(eng, prompts, samp, max_new=12)
+    assert got == ref
+    snap = eng.metrics_snapshot()
+    assert snap.spec_acceptance_rate == 1.0
+    # k+1 tokens per full round: far fewer rounds than tokens
+    assert snap.spec_rounds * 2 <= snap.generated_tokens
+
+
+def test_spec_colocated_identical_mechanics(small_lm, misaligned_draft):
+    """colocated=True only skips the wire frames; tokens are unchanged."""
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    prompts = _prompts(model.cfg.vocab_size, sizes=(5, 2, 7))
+    samp = [None, STOCH, None]
+    a = _run(SpecEngine(model, params, draft, dparams, max_batch=4,
+                        max_len=48, spec_k=2), prompts, samp)
+    b = _run(SpecEngine(model, params, draft, dparams, max_batch=4,
+                        max_len=48, spec_k=2, colocated=True), prompts, samp)
+    assert a == b
+
+
+def test_spec_accepted_distribution_matches_target(small_lm, misaligned_draft):
+    """Distribution preservation, tested exactly: for many seeds the
+    stochastic stream through the speculative engine equals the plain
+    engine's stream on that seed — the accepted-token distribution IS the
+    target distribution, seed by seed."""
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    prompt = _prompts(model.cfg.vocab_size, sizes=(6,))[0]
+    for seed in range(8):
+        sp = SamplingParams(temperature=8.0, top_k=64, seed=seed)
+        ref = _run(ServeEngine(model, params, max_batch=1, max_len=32),
+                   [prompt], [sp], max_new=6)
+        got = _run(SpecEngine(model, params, draft, dparams, max_batch=1,
+                              max_len=32, spec_k=3), [prompt], [sp],
+                   max_new=6)
+        assert got == ref, seed
+
+
+# ---------------------------------------------------------------------------
+# rollback across backends
+# ---------------------------------------------------------------------------
+
+def test_spec_paged_rollback_preempt_resume(small_lm, misaligned_draft):
+    """Paged target under block pressure: preempt mid-stream + resume via
+    recompute must stay token-identical; mid-window reservation failures
+    evict a victim rather than corrupt a lane."""
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    prompts = _prompts(model.cfg.vocab_size, sizes=(6, 5, 7, 4))
+    samp = [None, STOCH, None, STOCH2]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp, max_new=12)
+    eng = SpecEngine(model, params, draft, dparams, max_batch=4, max_len=48,
+                     spec_k=3,
+                     config=EngineConfig(kv_blocks=10, kv_block_size=4))
+    got = _run(eng, prompts, samp, max_new=12)
+    assert got == ref
+    snap = eng.metrics_snapshot()
+    assert snap.preemptions > 0 and snap.resumes > 0
+    # every block came home: nothing leaked across rollback + release
+    assert eng.backend.blocks_in_use == 0
+
+
+def test_spec_recurrent_rollback_replay():
+    """Recurrent (rwkv6) target + recurrent draft: rollback replays the
+    kept prefix from the pre-round stash; a misaligned draft makes every
+    round exercise it."""
+    cfg = dataclasses.replace(reduced_config(get_config("rwkv6-1.6b")),
+                              n_layers=2)
+    model = build_model(cfg, RCFG)
+    params = model.init(jax.random.key(0))
+    dcfg = dataclasses.replace(cfg, n_layers=1)
+    draft = build_model(dcfg, RCFG)
+    dparams = draft.init(jax.random.key(3))
+    prompts = _prompts(cfg.vocab_size, sizes=(6, 1, 4))
+    samp = [None, STOCH, None]
+    ref = _run(ServeEngine(model, params, max_batch=3, max_len=40),
+               prompts, samp)
+    got = _run(SpecEngine(model, params, draft, dparams, max_batch=3,
+                          max_len=40, spec_k=3), prompts, samp)
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Sampler API shim
+# ---------------------------------------------------------------------------
+
+def test_submit_legacy_kwargs_shim(small_lm):
+    """Loose temperature/top_k/seed kwargs still work (deprecated) and pin
+    the same stream as the SamplingParams spelling."""
+    model, params = small_lm
+    prompt = _prompts(model.cfg.vocab_size, sizes=(5,))[0]
+    ref = _run(ServeEngine(model, params, max_batch=1, max_len=32),
+               [prompt], [SamplingParams(temperature=8.0, top_k=64, seed=5)],
+               max_new=6)
+    eng = ServeEngine(model, params, max_batch=1, max_len=32)
+    with pytest.warns(DeprecationWarning):
+        rid = eng.submit(prompt, max_new=6, temperature=8.0, top_k=64, seed=5)
+    eng.run_until_drained()
+    assert [list(eng.finished[0].out_tokens)] == ref and rid is not None
+    # mixing both spellings is an error, not a precedence rule
+    with pytest.raises(TypeError):
+        eng.submit(prompt, sampling=SamplingParams(), temperature=1.0)
+
+
+def test_spec_engine_rejects_extra_inputs(small_lm, misaligned_draft):
+    model, params = small_lm
+    draft, dparams = misaligned_draft
+    eng = SpecEngine(model, params, draft, dparams, max_batch=2, max_len=32)
+    with pytest.raises(TypeError):
+        eng.submit([1, 2, 3], pixel_values=np.zeros((1, 4)))
+    with pytest.raises(ValueError):
+        SpecEngine(model, params, draft, dparams, max_batch=2, max_len=32,
+                   spec_k=0)
+
+
+# ---------------------------------------------------------------------------
+# fleet pairing
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_pair_identity_and_frames(aligned_lm):
+    from repro.hw.specs import get_profile
+    from repro.serving.fleet import ServingFleet, SpecPair, WorkerSpec
+    model, params, draft, dparams = aligned_lm
+    prompts = _prompts(model.cfg.vocab_size, sizes=(6, 3, 9, 1))
+    samp = [None, STOCH, None, STOCH2]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp)
+
+    pair = SpecPair(name="pair",
+                    draft=WorkerSpec("d0", get_profile("a18-pro")),
+                    target=WorkerSpec("t0", get_profile("m2-max-cpu")),
+                    draft_model=draft, draft_params=dparams, spec_k=3)
+    fleet = ServingFleet(model, params, spec_pairs=[pair], max_len=48)
+    rids = [fleet.submit(p, max_new=10, sampling=s)
+            for p, s in zip(prompts, samp)]
+    fleet.run_until_drained()
+    done = {r.rid: list(r.out_tokens)
+            for r in fleet.spec_pairs[0].engine.finished}
+    assert [done[r] for r in rids] == ref
+
+    ss = fleet.snapshot().per_spec["pair"]
+    assert ss.engine.spec_rounds > 0
+    assert ss.engine.spec_acceptance_rate == 1.0
+    assert ss.frame_bytes > 0 and ss.spec_k == 3
+    assert not ss.colocated and not ss.drained
+    assert set(ss.members) == {"d0", "t0"}
+    assert ss.goodput_tokens_per_s > 0
+
+
+def test_fleet_spec_pair_colocated_fallback(aligned_lm):
+    from repro.hw.specs import get_profile
+    from repro.serving.fleet import ServingFleet, SpecPair, WorkerSpec
+    model, params, draft, dparams = aligned_lm
+    prompts = _prompts(model.cfg.vocab_size, sizes=(6, 3))
+    samp = [None, STOCH]
+    ref = _run(ServeEngine(model, params, max_batch=4, max_len=48),
+               prompts, samp)
+    pair = SpecPair(name="pair",
+                    draft=WorkerSpec("d0", get_profile("a18-pro")),
+                    target=WorkerSpec("t0", get_profile("m2-max-cpu")),
+                    draft_model=draft, draft_params=dparams, spec_k=3)
+    fleet = ServingFleet(model, params, spec_pairs=[pair], max_len=48)
+    fleet.spec_pairs[0].set_colocated(True)
+    rids = [fleet.submit(p, max_new=10, sampling=s)
+            for p, s in zip(prompts, samp)]
+    fleet.run_until_drained()
+    done = {r.rid: list(r.out_tokens)
+            for r in fleet.spec_pairs[0].engine.finished}
+    assert [done[r] for r in rids] == ref
+    ss = fleet.snapshot().per_spec["pair"]
+    assert ss.colocated and ss.colocations == 1 and ss.frame_bytes == 0
