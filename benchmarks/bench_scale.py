@@ -1,0 +1,227 @@
+"""Production-scale fleet simulation bench: the CI gate for the scale plane.
+
+Two sections, both on :class:`repro.serving.scale.SimFleet` (no jax — this
+bench must run in CI seconds at hundreds of workers):
+
+* **tick_micro** — the vectorization claim.  A 200-worker fleet saturated
+  with queued work ticks under both implementations; the numpy
+  structure-of-arrays tick must beat the pre-refactor per-worker/per-lane
+  Python loop by >= 10x tick-throughput *while producing a bit-identical
+  snapshot* (the refactor is a speedup, not a semantics change).
+* **autoscale** — the serving story at production shape.  A diurnal load
+  curve with MMPP bursts offers >= 10k requests; a fleet starting at 24
+  phone workers must autoscale past 100 (params charged over the link as
+  warm-up before a new row serves) and hold >= 95% TTFT SLO attainment
+  measured against *offered* traffic (admission sheds count as misses).
+  The same trace against the same 24 workers without the autoscaler must
+  fail that SLO — otherwise the gate proves nothing.
+
+JSON summary lands in ``experiments/bench/scale.json`` and is regression-
+gated by ``benchmarks/check_regression.py`` against
+``benchmarks/baselines/scale.json``.
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit
+from repro.hw.specs import DeviceProfile
+from repro.runtime.elastic import AutoscalePolicy
+from repro.serving.metrics import SLOClass
+from repro.serving.scale import ScaleWorkerSpec, SimFleet, make_rows, play
+from repro.serving.traffic import diurnal_trace, merge_traces, mmpp_trace
+
+# a mid-tier phone, rated at the sustained serving rates the scale story
+# needs (the sim is capacity-level: only rates/thermals/link matter)
+PHONE = DeviceProfile(
+    name="phone-sim", year=2024, flops=1.9e12, mem_bytes=8e9,
+    mem_bw=60e9, link_bw=1.25e9, thermal_sustained=0.85, thermal_tau_s=60.0,
+    decode_steps_per_s=8.0, prefill_tokens_per_s=4000.0)
+PARAM_BYTES = 8e8        # ~800 MB of params streamed to every scaled-up row
+
+
+def bench_tick_micro(smoke: bool):
+    n_workers = 200
+    n_requests = 20_000 if not smoke else 12_000
+    settle, timed = 5, 30
+    spec = ScaleWorkerSpec(
+        profile=DeviceProfile(
+            name="phone-sim-fast", year=2024, flops=1.9e12, mem_bytes=8e9,
+            mem_bw=60e9, link_bw=1.25e9, thermal_sustained=0.85,
+            thermal_tau_s=60.0, decode_steps_per_s=30.0,
+            prefill_tokens_per_s=8000.0),
+        max_batch=8, max_queue=128)
+
+    def build(impl):
+        f = SimFleet(make_rows(spec, n_workers), tick_s=0.5, impl=impl,
+                     slo=(SLOClass("default"),), admission=False)
+        rng = np.random.default_rng(0)
+        for p, m in zip(rng.integers(16, 64, n_requests),
+                        rng.integers(64, 256, n_requests)):
+            f.submit(int(p), int(m))
+        return f
+
+    per_tick = {}
+    for impl in ("vector", "loop"):
+        f = build(impl)
+        for _ in range(settle):
+            f.tick()
+        t0 = time.perf_counter()
+        for _ in range(timed):
+            f.tick()
+        per_tick[impl] = (time.perf_counter() - t0) / timed
+    speedup = per_tick["loop"] / per_tick["vector"]
+
+    a, b = build("vector"), build("loop")
+    for _ in range(settle + timed):
+        a.tick()
+        b.tick()
+    identical = a.snapshot() == b.snapshot()
+    assert identical, "vectorized tick diverged from the loop baseline"
+    assert speedup >= 10.0, (
+        f"vectorized tick must be >= 10x the loop baseline at "
+        f"{n_workers} workers, got {speedup:.1f}x")
+
+    rows = [["scale_tick_micro", round(per_tick["vector"] * 1e6, 1),
+             f"workers={n_workers}", f"queued={n_requests}",
+             f"loop_us={per_tick['loop'] * 1e6:.0f}",
+             f"speedup={speedup:.1f}", f"identical={identical}"]]
+    summary = {
+        "workers": n_workers,
+        "queued_requests": n_requests,
+        "us_per_tick_vector": per_tick["vector"] * 1e6,
+        "us_per_tick_loop": per_tick["loop"] * 1e6,
+        "speedup": speedup,
+        "identical": identical,
+    }
+    return rows, summary
+
+
+def _scale_trace(smoke: bool):
+    dur = 420.0 if smoke else 840.0
+    sizes = dict(prompt_tokens=(16, 96), max_new_tokens=(24, 72))
+    base = diurnal_trace(30.0, dur, period_s=dur, depth=0.85, seed=7,
+                         **sizes)
+    burst = mmpp_trace(0.0, 60.0, dur, calm_dwell_s=90.0, burst_dwell_s=8.0,
+                       seed=11, **sizes)
+    return merge_traces(base, burst)
+
+
+def _run_scale(trace, *, autoscale: bool, n_rows=160, n_start=24):
+    policy = None
+    if autoscale:
+        policy = AutoscalePolicy(
+            min_workers=n_start, max_workers=n_rows,
+            target_wait_s=1.0, idle_wait_s=0.25,
+            step_frac=0.35, cooldown_s=2.0, settle_reads=4)
+    fleet = SimFleet(
+        make_rows(ScaleWorkerSpec(profile=PHONE, max_batch=4, max_queue=64),
+                  n_rows),
+        n_start=n_start, tick_s=0.1,
+        slo=(SLOClass("interactive", ttft_s=4.0, tpot_s=0.5),),
+        autoscaler=policy, autoscale_every_s=0.5,
+        warm_param_bytes=PARAM_BYTES, impl="vector")
+    t0 = time.perf_counter()
+    play(fleet, trace)
+    wall = time.perf_counter() - t0
+    return fleet.snapshot(), wall
+
+
+def _summarize(snap, wall: float) -> dict:
+    cls = snap.slo.classes[0]
+    return {
+        "wall_s": wall,
+        "sim_t": snap.sim_t,
+        "offered": snap.offered,
+        "completed": snap.completed,
+        "shed": snap.shed,
+        "rejected": snap.rejected,
+        "expired": snap.expired,
+        "peak_serving": snap.peak_serving,
+        "scale_ups": snap.scale_ups,
+        "scale_downs": snap.scale_downs,
+        "retired": snap.retired,
+        "warm_bytes_total": snap.warm_bytes_total,
+        "warm_link_s_total": snap.warm_link_s_total,
+        "attainment": snap.slo.attainment,
+        "served_attainment": snap.slo.served_attainment,
+        "ttft_p50": cls.ttft_p50,
+        "ttft_p99": cls.ttft_p99,
+        "tpot_p99": cls.tpot_p99,
+        "goodput_tokens_per_s": snap.slo.goodput_tokens_per_s,
+        "drains": snap.drains,
+        "undrains": snap.undrains,
+        "heat_max": snap.heat_max,
+    }
+
+
+def bench_autoscale(smoke: bool):
+    trace = _scale_trace(smoke)
+    on, wall_on = _run_scale(trace, autoscale=True)
+    off, wall_off = _run_scale(trace, autoscale=False)
+
+    assert on.offered >= 10_000, f"need >= 10k offered, got {on.offered}"
+    assert on.peak_serving >= 100, (
+        f"autoscaler must push past 100 workers, got {on.peak_serving}")
+    assert on.slo.attainment >= 0.95, (
+        f"autoscaled fleet must hold >= 95% SLO attainment, got "
+        f"{on.slo.attainment:.3f}")
+    assert off.slo.attainment < 0.95, (
+        f"the fixed-size baseline must FAIL the SLO (else the gate is "
+        f"vacuous), got {off.slo.attainment:.3f}")
+    assert on.scale_ups > 0 and on.scale_downs > 0, "autoscaler never acted"
+    assert on.warm_bytes_total > 0, "scale-up must charge params on the link"
+    ratio = on.slo.goodput_tokens_per_s / max(
+        off.slo.goodput_tokens_per_s, 1e-9)
+    assert ratio >= 2.0, f"autoscale goodput win too small: {ratio:.2f}x"
+
+    rows = [
+        ["scale_autoscale_on", round(wall_on * 1e6, 0),
+         f"offered={on.offered}", f"peak={on.peak_serving}",
+         f"attainment={on.slo.attainment:.3f}",
+         f"shed={on.shed}", f"goodput={on.slo.goodput_tokens_per_s:.0f}"],
+        ["scale_autoscale_off", round(wall_off * 1e6, 0),
+         f"offered={off.offered}", f"peak={off.peak_serving}",
+         f"attainment={off.slo.attainment:.3f}",
+         f"shed={off.shed}", f"goodput={off.slo.goodput_tokens_per_s:.0f}"],
+    ]
+    summary = {
+        "trace": {
+            "n": len(trace), "duration_s": trace.duration_s,
+            "offered_rps": trace.offered_rps,
+            "offered_tokens": trace.offered_tokens, "kind": trace.kind,
+        },
+        "autoscale": _summarize(on, wall_on),
+        "baseline": _summarize(off, wall_off),
+        "goodput_ratio": ratio,
+    }
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized config (still >= 100 workers / >= 10k "
+                         "requests — that IS the acceptance bar)")
+    args = ap.parse_args(argv)
+    micro_rows, micro = bench_tick_micro(args.smoke)
+    auto_rows, auto = bench_autoscale(args.smoke)
+    rows = micro_rows + auto_rows
+    width = max(len(r) for r in rows)
+    rows = [r + [""] * (width - len(r)) for r in rows]
+    emit("scale", rows,
+         ["name", "us"] + [f"d{i}" for i in range(1, width - 1)])
+    out = OUT_DIR / "scale.json"
+    out.write_text(json.dumps({
+        "smoke": args.smoke,
+        "rows": [[str(x) for x in r] for r in rows],
+        "tick_micro": micro,
+        **auto,
+    }, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Bench regression gate: compare bench JSON outputs against committed
+baselines with per-metric tolerance bands.
+
+    PYTHONPATH=src python -m benchmarks.check_regression [names...]
+
+Each committed baseline ``benchmarks/baselines/<name>.json`` declares the
+bench JSON it gates (``source``, a file under ``experiments/bench/``) and a
+``metrics`` map from dotted paths into that JSON to a band:
+
+* ``{"min": x}`` / ``{"max": x}`` — absolute one-sided bound (for gates
+  that mirror the bench's own asserts, and for wall-clock-dependent
+  numbers where only a floor is meaningful);
+* ``{"equals": v}`` — exact match (token-identity flags, counts);
+* ``{"baseline": v, "rel_tol": r}`` — committed expectation with a
+  relative band: value must land within ``v * (1 ± r)``.  Add
+  ``"direction": "min"`` (or ``"max"``) to only gate the harmful side —
+  e.g. goodput may exceed the baseline freely but not undershoot it.
+
+Prints a markdown delta table (also appended to ``$GITHUB_STEP_SUMMARY``
+when set, so the CI job summary shows exactly which metric moved and by
+how much) and exits non-zero if any metric regressed or went missing.
+"""
+import argparse
+import json
+import os
+from pathlib import Path
+
+from benchmarks.common import OUT_DIR
+
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+
+def _lookup(doc, path: str):
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return str(v)
+    if isinstance(v, int):
+        return str(v)
+    return f"{v:.4g}"
+
+
+def _check(value, band: dict):
+    """Returns (ok, expectation_text, delta_text)."""
+    if "equals" in band:
+        want = band["equals"]
+        return value == want, f"== {_fmt(want)}", ""
+    if "min" in band or "max" in band:
+        lo, hi = band.get("min"), band.get("max")
+        ok = ((lo is None or value >= lo) and (hi is None or value <= hi))
+        parts = ([f">= {_fmt(lo)}"] if lo is not None else []) \
+            + ([f"<= {_fmt(hi)}"] if hi is not None else [])
+        return ok, " and ".join(parts), ""
+    base = band["baseline"]
+    rel = band.get("rel_tol", 0.0)
+    direction = band.get("direction", "both")
+    lo = base * (1 - rel) if direction in ("both", "min") else None
+    hi = base * (1 + rel) if direction in ("both", "max") else None
+    ok = ((lo is None or value >= lo) and (hi is None or value <= hi))
+    delta = (value - base) / base if base else float("inf")
+    return ok, f"{_fmt(base)} ±{rel:.0%} ({direction})", f"{delta:+.1%}"
+
+
+def check_one(name: str, bench_dir: Path, rows: list) -> int:
+    """Append table rows for one baseline; returns the failure count."""
+    spec = json.loads((BASELINE_DIR / f"{name}.json").read_text())
+    src = bench_dir / spec["source"]
+    if not src.exists():
+        rows.append((f"{name}: {spec['source']}", "MISSING", "bench JSON "
+                     "not produced", "", "FAIL"))
+        return 1
+    doc = json.loads(src.read_text())
+    failures = 0
+    for path, band in spec["metrics"].items():
+        try:
+            value = _lookup(doc, path)
+        except KeyError:
+            rows.append((f"{name}: {path}", "MISSING", "metric absent",
+                         "", "FAIL"))
+            failures += 1
+            continue
+        ok, want, delta = _check(value, band)
+        rows.append((f"{name}: {path}", _fmt(value), want, delta,
+                     "ok" if ok else "FAIL"))
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*",
+                    help="baseline names (default: every committed baseline)")
+    ap.add_argument("--bench-dir", type=Path, default=OUT_DIR)
+    args = ap.parse_args(argv)
+    names = args.names or sorted(
+        p.stem for p in BASELINE_DIR.glob("*.json"))
+    if not names:
+        raise SystemExit("no baselines found")
+
+    rows = [("metric", "value", "expected", "Δ", "status"),
+            ("---", "---", "---", "---", "---")]
+    failures = 0
+    for name in names:
+        failures += check_one(name, args.bench_dir, rows)
+
+    widths = [max(len(str(r[i])) for r in rows) for i in range(5)]
+    table = "\n".join(
+        "| " + " | ".join(str(c).ljust(w) for c, w in zip(r, widths)) + " |"
+        for r in rows)
+    verdict = (f"{failures} metric(s) regressed" if failures
+               else f"all {len(rows) - 2} metrics within tolerance")
+    out = f"### Bench regression check\n\n{table}\n\n**{verdict}**\n"
+    print(out)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(out)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,7 @@ def main():
                   key=lambda r: (r.arch, r.shape, r.mesh))
     csv = []
     for r in rows:
-        csv.append([f"{r.arch}__{r.shape}__{r.mesh}", 
+        csv.append([f"{r.arch}__{r.shape}__{r.mesh}",
                     round(r.step_s * 1e6, 1),
                     r.status, r.strategy, round(r.compute_s, 5),
                     round(r.memory_s, 5), round(r.collective_s, 5),

@@ -1,17 +1,19 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [names...]
+    PYTHONPATH=src python -m benchmarks.run --list
 
 Emits ``name,us_per_call,derived...`` CSV lines (+ files under
-experiments/bench/).
+experiments/bench/).  ``--list`` imports every bench module and prints the
+registry without running anything — CI's cheap import-breakage smoke.
 """
 import sys
 import traceback
 
 from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
-                        bench_schedules, bench_serving, bench_spec,
-                        bench_thermal, bench_tool_parallel, bench_wire,
-                        roofline_report)
+                        bench_scale, bench_schedules, bench_serving,
+                        bench_spec, bench_thermal, bench_tool_parallel,
+                        bench_wire, roofline_report)
 
 ALL = {
     "devices": bench_devices.main,          # paper Table 1
@@ -27,10 +29,17 @@ ALL = {
     "serving": lambda: bench_serving.main([]),
     # speculative pairs on the fleet (ROADMAP); same explicit-argv guard
     "spec": lambda: bench_spec.main([]),
+    # production-scale fleet simulation (ROADMAP); same guard
+    "scale": lambda: bench_scale.main([]),
 }
 
 
 def main() -> None:
+    if "--list" in sys.argv[1:]:
+        # reaching this line proves every bench module imported cleanly
+        for name in ALL:
+            print(name)
+        return
     names = sys.argv[1:] or list(ALL)
     failed = []
     for name in names:

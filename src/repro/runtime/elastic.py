@@ -40,6 +40,7 @@ from repro.runtime.monitor import ThermalMonitor, ThermalState, WorkerStats
 class Action:
     # trainer kinds: swap | duty_cycle | rebalance | none
     # serving kinds: drain | undrain | migrate | duty_cycle
+    # scale kinds:   scale_up | scale_down
     kind: str
     worker: str = ""
     detail: dict = dataclasses.field(default_factory=dict)
@@ -184,3 +185,96 @@ class ServingElasticPolicy:
                 actions.append(Action("undrain", ws.worker))
         actions.extend(self.duty.step(monitor))
         return actions
+
+
+# ---------------------------------------------------------------------------
+# fleet-size elasticity (scale plane)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FleetLoad:
+    """One tick's aggregate load reading of a serving fleet — the signal an
+    :class:`AutoscalePolicy` scales against.  Produced by
+    :meth:`repro.serving.scale.SimFleet.load` (or any equivalent source)."""
+    sim_t: float
+    serving: int          # warmed, admitting workers (excl. retiring)
+    warming: int          # scaled up, still streaming params over the link
+    spare: int            # rows that could still be scaled up
+    queue_depth: int      # requests queued across serving workers
+    backlog_s: float      # mean predicted wait-to-first-token across workers
+    backlog_max_s: float  # worst single worker's predicted wait
+    hot_frac: float       # fraction of serving workers at SERIOUS or worse
+    util_mean: float      # mean busy fraction of the last tick
+
+
+class AutoscalePolicy:
+    """Fleet-size sibling of :class:`ServingElasticPolicy`: spin replica
+    workers (or split StageGroups — the fleet decides what a "row" is)
+    up/down against queue backlog and thermal headroom.
+
+    * **scale up** when predicted backlog exceeds ``target_wait_s`` or too
+      many serving workers run hot (``hot_frac > hot_headroom`` — thermal
+      pressure is capacity pressure on phones): add ``step_frac`` of the
+      current fleet, bounded by spares and ``max_workers``.  New capacity
+      is *not* free — the fleet charges each new worker's params over its
+      link as warm-up bytes before it serves.
+    * **scale down** when backlog stays below ``idle_wait_s`` and mean
+      utilisation below ``idle_util`` for ``settle_reads`` consecutive
+      readings: retire ``step_frac`` of the fleet (drain, then drop) down
+      to ``min_workers``.  The sustained-low requirement plus
+      ``cooldown_s`` between actions gives the same hysteresis flavour as
+      ServingElasticPolicy's undrain rule — capacity should not flap with
+      every burst.
+    """
+
+    def __init__(self, min_workers: int = 1, max_workers: int = 1 << 30, *,
+                 target_wait_s: float = 1.0, idle_wait_s: float = 0.2,
+                 hot_headroom: float = 0.25, idle_util: float = 0.35,
+                 step_frac: float = 0.25, cooldown_s: float = 5.0,
+                 settle_reads: int = 3):
+        if min_workers < 0 or max_workers < min_workers:
+            raise ValueError("need 0 <= min_workers <= max_workers")
+        self.min_workers = min_workers
+        self.max_workers = max_workers
+        self.target_wait_s = target_wait_s
+        self.idle_wait_s = idle_wait_s
+        self.hot_headroom = hot_headroom
+        self.idle_util = idle_util
+        self.step_frac = step_frac
+        self.cooldown_s = cooldown_s
+        self.settle_reads = settle_reads
+        self._last_action_t = float("-inf")
+        self._low_reads = 0
+
+    def _step_n(self, serving: int) -> int:
+        return max(1, int(serving * self.step_frac))
+
+    def step(self, load: FleetLoad) -> List[Action]:
+        busy = (load.backlog_s > self.target_wait_s
+                or load.hot_frac > self.hot_headroom)
+        idle = (load.backlog_s < self.idle_wait_s
+                and load.util_mean < self.idle_util
+                and load.queue_depth == 0)
+        self._low_reads = self._low_reads + 1 if idle else 0
+        if load.sim_t - self._last_action_t < self.cooldown_s:
+            return []
+        provisioned = load.serving + load.warming
+        if busy:
+            n = min(self._step_n(provisioned), load.spare,
+                    self.max_workers - provisioned)
+            if n > 0:
+                self._last_action_t = load.sim_t
+                self._low_reads = 0
+                return [Action("scale_up", "", {
+                    "n": n, "backlog_s": load.backlog_s,
+                    "hot_frac": load.hot_frac})]
+            return []
+        if idle and self._low_reads >= self.settle_reads:
+            n = min(self._step_n(provisioned),
+                    load.serving - self.min_workers)
+            if n > 0:
+                self._last_action_t = load.sim_t
+                self._low_reads = 0
+                return [Action("scale_down", "", {
+                    "n": n, "backlog_s": load.backlog_s,
+                    "util_mean": load.util_mean})]
+        return []

@@ -55,7 +55,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,6 +198,20 @@ class ServeEngine:
                                         n_blocks=self.backend.n_blocks)
 
         self._prefill1, self._prefill_n = _shared_prefill_jits(model, max_len)
+
+    # ------------------------------------------------------------------
+    # clock
+    # ------------------------------------------------------------------
+    @property
+    def clock(self) -> Callable[[], float]:
+        """The engine's time source (wall ``time.perf_counter`` by default,
+        a sim clock when constructed with ``clock=``).  Drivers pace by this
+        so sim-time engines are never slept against wall time."""
+        return self._now
+
+    def now(self) -> float:
+        """Current time on the engine's clock (seconds)."""
+        return self._now()
 
     # ------------------------------------------------------------------
     # submission / admission

@@ -372,6 +372,8 @@ class _Worker(_Paced):
         self.prefill_rate = spec.profile.prefill_rate()
         self.drained = False
         self.n_collected = 0         # engine.finished entries already seen
+        self.done_count = 0          # completed requests (incremental; the
+        self.done_tokens = 0         # snapshot must not rescan the log)
 
     def free_fraction(self) -> float:
         """Free capacity in [0, 1]: pool budget fraction for budgeted
@@ -411,6 +413,8 @@ class _GroupRuntime:
         self.fixed_mem = fixed_mem
         self.drained = False
         self.n_collected = 0
+        self.done_count = 0
+        self.done_tokens = 0
         self.steps_run = 0
         self.pending: Deque[_Charge] = collections.deque()
         self.link_acc = 0.0              # unspent link time, seconds
@@ -468,6 +472,8 @@ class _SpecRuntime:
         self.draft_share = draft_share
         self.drained = False
         self.n_collected = 0
+        self.done_count = 0
+        self.done_tokens = 0
         self.steps_run = 0               # rounds fully paid in sim time
         self.pending: Deque[_Charge] = collections.deque()
         self.link_acc = 0.0
@@ -585,6 +591,7 @@ class ServingFleet:
         self.ticks = 0
         self._rid = 0
         self.completed: List[CompletedRecord] = []
+        self.completed_tokens = 0    # kept incrementally by _collect_finished
         self.routed: Dict[int, str] = {}      # rid -> first unit routed to
         self.action_log: List[Tuple[float, Action]] = []   # (sim_t, action)
         self.migrations = 0
@@ -723,6 +730,12 @@ class ServingFleet:
         for req in done[u.n_collected:]:
             self.completed.append(CompletedRecord(
                 req, u.name, self.sim_t, req.rid in self._migrated_rids))
+            # incremental per-unit + fleet totals: snapshot() must stay
+            # O(units), not O(units x completed-request log)
+            toks = len(req.out_tokens)
+            u.done_count += 1
+            u.done_tokens += toks
+            self.completed_tokens += toks
         u.n_collected = len(done)
 
     def _observe_or_probe(self, p: _Paced, ran: bool,
@@ -1243,16 +1256,14 @@ class ServingFleet:
         per_worker: Dict[str, WorkerSnapshot] = {}
         sim = max(self.sim_t, 1e-12)
         for w in self.workers:
-            recs = [r for r in self.completed if r.worker == w.name]
-            toks = sum(len(r.req.out_tokens) for r in recs)
             ws = self.monitor.workers.get(w.name)
             per_worker[w.name] = WorkerSnapshot(
                 name=w.name,
                 profile=w.spec.profile.name,
                 engine=w.engine.metrics_snapshot(),
-                completed=len(recs),
-                completed_tokens=toks,
-                goodput_tokens_per_s=toks / sim,
+                completed=w.done_count,
+                completed_tokens=w.done_tokens,
+                goodput_tokens_per_s=w.done_tokens / sim,
                 steps_run=w.steps_run,
                 duty=w.duty,
                 drained=w.drained,
@@ -1264,8 +1275,6 @@ class ServingFleet:
             )
         per_group: Dict[str, GroupSnapshot] = {}
         for g in self.groups:
-            recs = [r for r in self.completed if r.worker == g.name]
-            toks = sum(len(r.req.out_tokens) for r in recs)
             members = {}
             for m in g.members:
                 ws = self.monitor.workers.get(m.name)
@@ -1284,9 +1293,9 @@ class ServingFleet:
                 workers=tuple(m.name for m in g.members),
                 cuts=g.engine.cuts,
                 engine=g.engine.metrics_snapshot(),
-                completed=len(recs),
-                completed_tokens=toks,
-                goodput_tokens_per_s=toks / sim,
+                completed=g.done_count,
+                completed_tokens=g.done_tokens,
+                goodput_tokens_per_s=g.done_tokens / sim,
                 steps_run=g.steps_run,
                 drained=g.drained,
                 recuts=g.recuts,
@@ -1299,8 +1308,6 @@ class ServingFleet:
             )
         per_spec: Dict[str, SpecSnapshot] = {}
         for s in self.spec_pairs:
-            recs = [r for r in self.completed if r.worker == s.name]
-            toks = sum(len(r.req.out_tokens) for r in recs)
             members = {}
             for m in s.members:
                 ws = self.monitor.workers.get(m.name)
@@ -1320,9 +1327,9 @@ class ServingFleet:
                 spec_k=s.spec.spec_k,
                 draft_share=s.draft_share,
                 engine=s.engine.metrics_snapshot(),
-                completed=len(recs),
-                completed_tokens=toks,
-                goodput_tokens_per_s=toks / sim,
+                completed=s.done_count,
+                completed_tokens=s.done_tokens,
+                goodput_tokens_per_s=s.done_tokens / sim,
                 rounds_run=s.steps_run,
                 drained=s.drained,
                 colocated=s.engine.colocated,
@@ -1332,7 +1339,7 @@ class ServingFleet:
                 link_stall_ticks=s.link_stall_ticks,
                 members=members,
             )
-        total_tokens = sum(len(r.req.out_tokens) for r in self.completed)
+        total_tokens = self.completed_tokens
         units: List[_Routable] = [*self.workers, *self.groups,
                                   *self.spec_pairs]
         return FleetSnapshot(

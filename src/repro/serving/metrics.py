@@ -13,12 +13,21 @@ Definitions (standard serving vocabulary):
 ``MetricsCollector`` is pure bookkeeping (no jax); the engine feeds it
 events and asks for a :class:`EngineSnapshot` — a frozen, structured view
 suitable for logging, benches, and assertions in tests.
+
+SLO accounting (fleet/scale plane) lives here too: :class:`SLOClass`
+declares a traffic class's TTFT/TPOT targets, :func:`slo_report` folds
+per-request outcomes into an :class:`SLOReport` with per-class p50/p99
+latencies and **attainment** — the fraction of *offered* requests that
+completed within their class targets.  Requests the system never served
+(admission-shed, capacity-rejected, deadline-expired) count as misses:
+shedding load keeps served latency pretty, but attainment is measured
+against everything the users asked for.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 def _percentile(xs: List[float], q: float) -> float:
@@ -95,6 +104,145 @@ class EngineSnapshot:
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting (fleet / scale plane)
+# ---------------------------------------------------------------------------
+# terminal request outcomes, as used by slo_report's ``outcome`` array
+OUTCOME_DONE = 0        # completed: latencies are valid
+OUTCOME_SHED = 1        # admission controller rejected at submit (predicted miss)
+OUTCOME_REJECTED = 2    # capacity reject: every eligible queue was full
+OUTCOME_EXPIRED = 3     # deadline passed while still queued
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One traffic class's service-level objective (targets in seconds).
+    ``ttft_s`` also feeds predicted-TTFT admission control when a request
+    carries no explicit deadline; ``inf`` disables a bound."""
+    name: str
+    ttft_s: float = float("inf")
+    tpot_s: float = float("inf")
+
+
+class _NanEq:
+    """Field-wise equality that treats NaN == NaN as true.  SLO reports
+    carry NaN for undefined stats (percentiles of an empty class, served
+    attainment with zero completions); determinism tests compare whole
+    snapshots, and two bit-identical runs must compare equal even where a
+    stat is undefined."""
+
+    @staticmethod
+    def _eq(a, b) -> bool:
+        if isinstance(a, tuple) and isinstance(b, tuple):
+            return (len(a) == len(b)
+                    and all(_NanEq._eq(x, y) for x, y in zip(a, b)))
+        return bool(a == b) or (a != a and b != b)
+
+    def __eq__(self, other):
+        if other.__class__ is not self.__class__:
+            return NotImplemented
+        return self._eq(dataclasses.astuple(self), dataclasses.astuple(other))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ClassSLOReport(_NanEq):
+    """SLO outcome for one traffic class.  ``attainment`` is met/offered
+    (unserved requests are misses); ``served_attainment`` is met/completed
+    (how the served ones fared)."""
+    name: str
+    offered: int
+    completed: int
+    shed: int
+    rejected: int
+    expired: int
+    ttft_p50: float
+    ttft_p99: float
+    tpot_p50: float
+    tpot_p99: float
+    met: int
+    attainment: float
+    served_attainment: float
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SLOReport(_NanEq):
+    """Fleet-wide SLO rollup: per-class reports + offered-weighted totals.
+    ``goodput_tokens_per_s`` counts only tokens of SLO-met requests — the
+    throughput users actually experienced within target."""
+    classes: Tuple[ClassSLOReport, ...]
+    offered: int
+    completed: int
+    shed: int
+    rejected: int
+    expired: int
+    met: int
+    attainment: float
+    served_attainment: float
+    goodput_tokens_per_s: float
+    tokens_per_s: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def slo_report(specs: Sequence[SLOClass], class_ids: Sequence[int],
+               ttft_s: Sequence[float], tpot_s: Sequence[float],
+               tokens: Sequence[int], outcome: Sequence[int],
+               span_s: float) -> SLOReport:
+    """Fold per-request outcomes into an :class:`SLOReport`.
+
+    Parallel arrays, one entry per *offered* request: its class id, TTFT
+    and TPOT in seconds (ignored unless ``outcome == OUTCOME_DONE``; TPOT
+    may be NaN for single-token requests and then counts as met), generated
+    tokens, and terminal outcome (``OUTCOME_*``).  ``span_s`` is the span
+    the token rates are normalised over (sim or wall seconds).
+    """
+    n = len(class_ids)
+    reports: List[ClassSLOReport] = []
+    tot_met = tot_done = tot_shed = tot_rej = tot_exp = 0
+    good_tokens = all_tokens = 0
+    for cid, spec in enumerate(specs):
+        idx = [i for i in range(n) if class_ids[i] == cid]
+        done = [i for i in idx if outcome[i] == OUTCOME_DONE]
+        shed = sum(1 for i in idx if outcome[i] == OUTCOME_SHED)
+        rej = sum(1 for i in idx if outcome[i] == OUTCOME_REJECTED)
+        exp = sum(1 for i in idx if outcome[i] == OUTCOME_EXPIRED)
+        ttfts = [float(ttft_s[i]) for i in done]
+        tpots = [float(tpot_s[i]) for i in done
+                 if tpot_s[i] == tpot_s[i]]          # drop NaN (n_tokens == 1)
+        met = 0
+        for i in done:
+            ok_ttft = float(ttft_s[i]) <= spec.ttft_s
+            tp = float(tpot_s[i])
+            ok_tpot = (tp != tp) or tp <= spec.tpot_s
+            if ok_ttft and ok_tpot:
+                met += 1
+                good_tokens += int(tokens[i])
+            all_tokens += int(tokens[i])
+        offered = len(idx)
+        reports.append(ClassSLOReport(
+            name=spec.name, offered=offered, completed=len(done),
+            shed=shed, rejected=rej, expired=exp,
+            ttft_p50=_percentile(ttfts, 0.50), ttft_p99=_percentile(ttfts, 0.99),
+            tpot_p50=_percentile(tpots, 0.50), tpot_p99=_percentile(tpots, 0.99),
+            met=met,
+            attainment=met / offered if offered else float("nan"),
+            served_attainment=met / len(done) if done else float("nan")))
+        tot_met += met
+        tot_done += len(done)
+        tot_shed += shed
+        tot_rej += rej
+        tot_exp += exp
+    offered = sum(r.offered for r in reports)
+    return SLOReport(
+        classes=tuple(reports), offered=offered, completed=tot_done,
+        shed=tot_shed, rejected=tot_rej, expired=tot_exp, met=tot_met,
+        attainment=tot_met / offered if offered else float("nan"),
+        served_attainment=tot_met / tot_done if tot_done else float("nan"),
+        goodput_tokens_per_s=good_tokens / span_s if span_s > 0 else 0.0,
+        tokens_per_s=all_tokens / span_s if span_s > 0 else 0.0)
 
 
 class MetricsCollector:

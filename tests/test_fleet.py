@@ -14,6 +14,7 @@ from repro.serving.engine import EngineConfig, ServeEngine
 from repro.serving.fleet import (ServingFleet, ThermalReservoir,
                                  ThrottleTrace, WorkerSpec, drive_sim)
 from repro.serving.sampling import SamplingParams
+from repro.serving.traffic import poisson_trace
 from repro.serving.scheduler import SchedulerConfig
 
 RCFG = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
@@ -416,3 +417,28 @@ def test_fleet_duty_cycle_paces_steps(small_lm):
     full, half = steps_after(None), steps_after(HalfDuty())
     assert full > half >= 1
     assert half <= 0.7 * full                    # ~0.5 with rounding slack
+
+
+def test_fleet_seeded_trace_is_deterministic(small_lm):
+    """Same traffic seed -> identical FleetSnapshot, run to run: the whole
+    serving path (trace, routing, scheduling, thermal policy) runs on
+    seeded RNGs and the sim clock, so nothing about a run may depend on
+    host timing."""
+    model, params = small_lm
+    trace = poisson_trace(4.0, 1.5, seed=5, prompt_tokens=(4, 10),
+                          max_new_tokens=(2, 6))
+    assert len(trace) > 0
+
+    def run():
+        fleet = _fleet(model, params)
+        rng = np.random.default_rng(9)
+        prompts = [rng.integers(0, model.cfg.vocab_size, size=int(p))
+                   .astype(np.int32) for p in trace.prompt_lens]
+
+        def sub(i):
+            fleet.submit(prompts[i], max_new=int(trace.max_news[i]))
+
+        drive_sim(fleet, trace.arrivals, sub)
+        return fleet.snapshot()
+
+    assert run() == run()

@@ -1,0 +1,297 @@
+"""Scale plane: SimFleet semantics, traffic determinism, SLO accounting.
+
+Everything here is jax-free (the point of the scale plane), so these tests
+cover production-shaped scenarios — 100+ deep queues, autoscale cycles —
+in milliseconds.
+"""
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.hw.specs import DeviceProfile
+from repro.runtime.elastic import Action, AutoscalePolicy, FleetLoad
+from repro.serving.metrics import (OUTCOME_DONE, OUTCOME_SHED, SLOClass,
+                                   slo_report)
+from repro.serving.scale import ScaleWorkerSpec, SimFleet, make_rows, play
+from repro.serving.traffic import (SimClock, diurnal_trace, drive_open_loop,
+                                   merge_traces, mmpp_trace, poisson_trace)
+
+
+def _profile(decode=10.0, prefill=1e4, sustained=0.85, tau=60.0):
+    return DeviceProfile(name="sim", year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=decode,
+                         prefill_tokens_per_s=prefill,
+                         thermal_sustained=sustained, thermal_tau_s=tau)
+
+
+def _spec(**kw):
+    prof_kw = {k: kw.pop(k) for k in ("decode", "prefill", "sustained", "tau")
+               if k in kw}
+    return ScaleWorkerSpec(profile=_profile(**prof_kw), **kw)
+
+
+# ---------------------------------------------------------------------------
+# traffic traces
+# ---------------------------------------------------------------------------
+def test_traces_are_seed_deterministic():
+    for make in (lambda s: poisson_trace(5.0, 20.0, seed=s),
+                 lambda s: diurnal_trace(5.0, 20.0, period_s=20.0, seed=s),
+                 lambda s: mmpp_trace(1.0, 20.0, 20.0, seed=s)):
+        a, b = make(3), make(3)
+        np.testing.assert_array_equal(a.arrivals, b.arrivals)
+        np.testing.assert_array_equal(a.prompt_lens, b.prompt_lens)
+        np.testing.assert_array_equal(a.max_news, b.max_news)
+        np.testing.assert_array_equal(a.classes, b.classes)
+        assert not np.array_equal(a.arrivals, make(4).arrivals)
+
+
+def test_merge_traces_interleaves_sorted():
+    m = merge_traces(poisson_trace(3.0, 10.0, seed=0),
+                     mmpp_trace(1.0, 10.0, 10.0, seed=1))
+    assert np.all(np.diff(m.arrivals) >= 0)
+    assert len(m) == (len(poisson_trace(3.0, 10.0, seed=0))
+                      + len(mmpp_trace(1.0, 10.0, 10.0, seed=1)))
+
+
+def test_sim_fleet_seeded_run_is_deterministic():
+    """Same seed -> same trace -> identical snapshot, twice over (the
+    scale-plane analogue of the FleetSnapshot determinism test)."""
+    trace = merge_traces(
+        diurnal_trace(20.0, 30.0, period_s=30.0, seed=2),
+        mmpp_trace(0.0, 30.0, 30.0, calm_dwell_s=10.0, burst_dwell_s=2.0,
+                   seed=3))
+
+    def run():
+        fleet = SimFleet(
+            make_rows(_spec(max_batch=4, max_queue=32), 24), n_start=6,
+            tick_s=0.1, slo=(SLOClass("interactive", ttft_s=2.0),),
+            autoscaler=AutoscalePolicy(min_workers=6, max_workers=24,
+                                       target_wait_s=0.5, cooldown_s=1.0),
+            autoscale_every_s=0.5, warm_param_bytes=1e8)
+        play(fleet, trace)
+        return fleet.snapshot()
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# loop-vs-vector oracle
+# ---------------------------------------------------------------------------
+def test_loop_and_vector_ticks_are_bit_identical():
+    """The vectorized tick is a refactor, not a resemantic: a mixed
+    scenario (deadlines, thermal drain, autoscaling, expiry) must produce
+    the exact same snapshot under both implementations."""
+    def run(impl):
+        fleet = SimFleet(
+            make_rows(_spec(decode=4.0, sustained=0.5, tau=3.0,
+                            max_batch=2, max_queue=16), 8),
+            n_start=3, tick_s=0.1,
+            slo=(SLOClass("interactive", ttft_s=5.0),),
+            autoscaler=AutoscalePolicy(min_workers=3, max_workers=8,
+                                       target_wait_s=0.3, cooldown_s=0.5,
+                                       settle_reads=2),
+            autoscale_every_s=0.3, warm_param_bytes=2e8, impl=impl)
+        rng = np.random.default_rng(0)
+        sizes = list(zip(rng.integers(4, 40, 100), rng.integers(2, 30, 100)))
+        for step in range(240):
+            if step < 50:
+                for p, m in sizes[2 * step: 2 * step + 2]:
+                    fleet.submit(int(p), int(m),
+                                 deadline_s=6.0 if step % 3 else None)
+            fleet.tick()
+        return fleet.snapshot()
+
+    a, b = run("vector"), run("loop")
+    assert a.completed > 0          # the scenario exercises the decode path
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# admission shed vs capacity reject vs queued expiry
+# ---------------------------------------------------------------------------
+def test_capacity_reject_when_every_queue_is_full():
+    fleet = SimFleet([_spec(max_queue=4)], admission=False)
+    for _ in range(10):
+        fleet.submit(8, 4)
+    assert fleet.rejected == 6 and fleet.shed == 0
+    assert fleet.offered == 10 and int(fleet.queue_len[0]) == 4
+
+
+def test_admission_sheds_on_predicted_ttft_not_capacity():
+    fleet = SimFleet([_spec(prefill=100.0, max_queue=64)],
+                     slo=(SLOClass("interactive", ttft_s=0.5),))
+    # 200 prompt tokens at 100 tok/s prefill -> 2s predicted TTFT > 0.5s
+    assert fleet.submit(200, 4) is None
+    assert fleet.shed == 1 and fleet.rejected == 0
+    # a small prompt still fits the budget and is queued normally
+    assert fleet.submit(10, 4) is not None
+    snap = fleet.snapshot()
+    assert snap.shed == 1 and snap.slo.shed == 1
+    assert snap.slo.classes[0].shed == 1
+
+
+def test_deadline_expiry_behind_drained_worker_at_depth():
+    """120 queued requests behind a thermally drained worker: heads hold
+    the lanes, everything behind them expires at pop time — counted as
+    expired, never as shed/rejected, and the books still balance."""
+    fleet = SimFleet(
+        [_spec(decode=1.0, prefill=1e6, sustained=0.5, tau=float("inf"),
+               max_batch=2, max_queue=128)],
+        tick_s=0.05, admission=False)
+    for _ in range(120):
+        fleet.submit(4, 50, deadline_s=1.0)
+    assert int(fleet.queue_len[0]) == 120          # 100+ deep, none admitted
+    fleet.heat[0] = 0.30       # slowdown 1.3 >= CRITICAL edge; inf tau
+    #                            freezes the reservoir so the drain holds
+    for _ in range(60):        # 3 sim-seconds >> the 1s deadlines
+        fleet.tick()
+    assert fleet.drains >= 1 and bool(fleet.drained[0])
+    assert fleet.expired >= 100
+    assert fleet.shed == 0 and fleet.rejected == 0
+    snap = fleet.snapshot()
+    assert snap.offered == (snap.completed + snap.shed + snap.rejected
+                            + snap.expired + snap.queued_now + snap.active_now)
+
+
+def test_books_balance_once_drained():
+    trace = poisson_trace(30.0, 10.0, seed=1, prompt_tokens=(4, 32),
+                          max_new_tokens=(2, 12))
+    fleet = SimFleet(make_rows(_spec(max_batch=4, max_queue=8), 4),
+                     slo=(SLOClass("interactive", ttft_s=0.5),))
+    play(fleet, trace)
+    snap = fleet.snapshot()
+    assert snap.queued_now == 0 and snap.active_now == 0
+    assert snap.offered == len(trace)
+    assert snap.offered == (snap.completed + snap.shed + snap.rejected
+                            + snap.expired)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+def test_autoscale_policy_bounds_and_hysteresis():
+    pol = AutoscalePolicy(min_workers=2, max_workers=6, target_wait_s=1.0,
+                          idle_wait_s=0.2, step_frac=1.0, cooldown_s=5.0,
+                          settle_reads=2)
+
+    def load(t, *, serving, backlog, spare=10, util=0.0, depth=0):
+        return FleetLoad(sim_t=t, serving=serving, warming=0, spare=spare,
+                         queue_depth=depth, backlog_s=backlog,
+                         backlog_max_s=backlog, hot_frac=0.0, util_mean=util)
+
+    acts = pol.step(load(0.0, serving=2, backlog=9.0))
+    assert [a.kind for a in acts] == ["scale_up"]
+    assert acts[0].detail["n"] == 2                # step_frac, within max
+    assert pol.step(load(1.0, serving=4, backlog=9.0)) == []   # cooldown
+    acts = pol.step(load(6.0, serving=4, backlog=9.0))
+    assert acts[0].detail["n"] == 2                # clipped at max_workers=6
+    assert pol.step(load(12.0, serving=6, backlog=9.0)) == []  # at the cap
+    # scale-down needs settle_reads consecutive idle readings
+    assert pol.step(load(20.0, serving=6, backlog=0.0)) == []
+    acts = pol.step(load(21.0, serving=6, backlog=0.0))
+    assert [a.kind for a in acts] == ["scale_down"]
+    assert acts[0].detail["n"] == 4                # down to min_workers=2
+    # a burst resets the idle streak
+    assert pol.step(load(30.0, serving=2, backlog=9.0, spare=0)) == []
+
+
+def test_fleet_scales_up_with_warm_delay_and_retires_down_to_min():
+    link_bw = _profile().link_bw
+    warm_bytes = 2.0 * link_bw                     # 2 sim-seconds per row
+    fleet = SimFleet(
+        make_rows(_spec(decode=2.0, max_batch=2, max_queue=64), 8),
+        n_start=2, tick_s=0.1, admission=False,
+        autoscaler=AutoscalePolicy(min_workers=2, max_workers=6,
+                                   target_wait_s=0.1, idle_wait_s=0.05,
+                                   step_frac=1.0, cooldown_s=0.0,
+                                   settle_reads=2),
+        autoscale_every_s=0.1, warm_param_bytes=warm_bytes)
+    for _ in range(40):
+        fleet.submit(4, 20)
+    fleet.tick()
+    assert fleet.scale_ups >= 1
+    assert int(fleet.alive.sum()) > 2
+    # warming rows are provisioned but not serving until params land
+    assert int(fleet._serving_mask().sum()) == 2
+    assert fleet.warm_bytes_total == warm_bytes * (int(fleet.alive.sum()) - 2)
+    for _ in range(25):                            # ~2.5s: params arrive
+        fleet.tick()
+    assert int(fleet._serving_mask().sum()) > 2
+    for _ in range(2000):                          # drain + go idle
+        fleet.tick()
+        if fleet.idle() and int(fleet._serving_mask().sum()) == 2:
+            break
+    snap = fleet.snapshot()
+    assert snap.peak_serving <= 6                  # max_workers held
+    assert snap.scale_downs >= 1 and snap.retired >= 1
+    assert snap.serving_now == 2                   # back at min_workers
+    assert snap.completed == 40                    # nothing lost on the way
+
+
+# ---------------------------------------------------------------------------
+# drivers: sim clocks never sleep
+# ---------------------------------------------------------------------------
+class _StubEngine:
+    """Minimal drive_open_loop surface: clock/active/step/scheduler."""
+
+    def __init__(self, clock):
+        self.clock = clock
+        self.scheduler = SimpleNamespace(depth=0)
+        self.submitted = []
+
+    def active(self) -> bool:
+        return False
+
+    def step(self) -> bool:
+        return False
+
+
+def test_drive_open_loop_sim_clock_advances_instead_of_sleeping(monkeypatch):
+    def boom(_):
+        raise AssertionError("slept under a simulated clock")
+    monkeypatch.setattr(time, "sleep", boom)
+    eng = _StubEngine(SimClock())
+    arrivals = [0.0, 5.0, 9.0]
+    elapsed = drive_open_loop(eng, arrivals,
+                              lambda i, now: eng.submitted.append((i, now)))
+    assert [i for i, _ in eng.submitted] == [0, 1, 2]
+    assert elapsed >= 9.0                          # jumped, not napped
+
+
+def test_drive_open_loop_wall_clock_kw_is_deprecated():
+    eng = _StubEngine(SimClock())
+    with pytest.warns(DeprecationWarning, match="wall_clock"):
+        drive_open_loop(eng, [0.0], lambda i, now: None, wall_clock=False)
+
+
+def test_drive_open_loop_rejects_sim_clock_without_advance():
+    eng = _StubEngine(lambda: 0.0)                 # sim-paced, no advance()
+    with pytest.raises(TypeError, match="advance"):
+        drive_open_loop(eng, [0.0, 1.0], lambda i, now: None)
+
+
+# ---------------------------------------------------------------------------
+# SLO report math
+# ---------------------------------------------------------------------------
+def test_slo_report_folds_outcomes_per_class():
+    specs = (SLOClass("a", ttft_s=1.0, tpot_s=0.1), SLOClass("b"))
+    report = slo_report(
+        specs,
+        class_ids=[0, 0, 0, 1],
+        ttft_s=[0.5, 2.0, float("nan"), 0.2],
+        tpot_s=[0.05, 0.05, float("nan"), float("nan")],
+        tokens=[10, 10, 0, 5],
+        outcome=[OUTCOME_DONE, OUTCOME_DONE, OUTCOME_SHED, OUTCOME_DONE],
+        span_s=10.0)
+    a, b = report.classes
+    assert (a.offered, a.completed, a.shed) == (3, 2, 1)
+    assert a.met == 1                              # 2.0s TTFT blows the SLO
+    assert a.attainment == pytest.approx(1 / 3)
+    assert a.served_attainment == pytest.approx(1 / 2)
+    assert b.met == 1                              # no limits: done == met
+    assert report.offered == 4 and report.met == 2
+    assert report.attainment == pytest.approx(0.5)
+    assert report.goodput_tokens_per_s == pytest.approx(1.5)   # met tokens
+    assert report.tokens_per_s == pytest.approx(2.5)           # all tokens
