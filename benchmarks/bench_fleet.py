@@ -198,6 +198,36 @@ def bench_migration_prefix_cache(cfg, model, params, *, smoke: bool):
     return rows, summary
 
 
+def bench_trace_guard(cfg, model, params, *, smoke: bool):
+    """Steady-state retrace gate across the WHOLE fleet (PR 4's bug).
+
+    Two workers share one model; jit wrappers are lru_cache-shared per
+    (model, shape), so a second identical fleet run after warmup must
+    trigger zero traces — a retrace here means some worker rebuilt a
+    wrapper per instance.  The warmup run takes the compiles; the guarded
+    run replays the same seeded traffic on a brand-new fleet.
+    """
+    from repro.runtime.guard import TraceGuard
+
+    n = 6 if smoke else 10
+    prompts, arrivals, samplings = _traffic(cfg, n, span_s=0.8, seed=9)
+    max_new = 6 if smoke else 10
+
+    def run():
+        _, snap = _run_fleet(model, params, prompts, arrivals, samplings,
+                             max_new, policy=None, thermal_routing=False)
+        return snap
+
+    run()                                   # warmup: compile once, fleet-wide
+    with TraceGuard(max_retraces=0, name="bench_fleet") as tg:
+        snap = run()                        # new fleet, same model: all hits
+    rows = [["trace_guard", 0, f"retraces={tg.total}",
+             f"completed={snap.completed}"]]
+    summary = {"retraces": tg.total, "traces": tg.traces,
+               "compiles": tg.compiles, "completed": snap.completed}
+    return rows, summary
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -208,6 +238,9 @@ def main(argv=None):
     cache_rows, cache_summary = bench_migration_prefix_cache(
         cfg, model, params, smoke=args.smoke)
     rows += cache_rows
+    guard_rows, guard_summary = bench_trace_guard(cfg, model, params,
+                                                  smoke=args.smoke)
+    rows += guard_rows
     width = max(len(r) for r in rows)
     rows = [r + [""] * (width - len(r)) for r in rows]
     emit("fleet", rows,
@@ -218,6 +251,7 @@ def main(argv=None):
         "rows": [[str(x) for x in r] for r in rows],
         "policies": summary,
         "migration_prefix_cache": cache_summary,
+        "trace_guard": guard_summary,
     }, indent=2) + "\n")
     print(f"wrote {out}")
 

@@ -275,6 +275,38 @@ def bench_load_sweep(cfg, model, params, *, loads=(4.0, 16.0),
     return rows
 
 
+def bench_trace_guard(cfg, model, params):
+    """Steady-state retrace gate (runtime face of repro-lint R001).
+
+    A FRESH engine on an already-warm model must admit, prefill, and
+    decode with ZERO new traces: all jit wrappers are module-level or
+    lru_cache-shared per (model, shape), never per instance — the
+    invariant PR 4's fleet recompile bug violated.  The warmup run
+    compiles every (bucket, chunk) program once; the guarded run then
+    replays the identical workload on a new ServeEngine and TraceGuard
+    raises on any compile-log event.
+    """
+    from repro.runtime.guard import TraceGuard
+
+    prompts = _prompts(cfg, 8, seed=5)
+
+    def run():
+        eng = ServeEngine(model, params, max_batch=4, max_len=64)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        eng.run_until_drained()
+        return eng.metrics_snapshot()
+
+    run()                                   # warmup: compile everything once
+    with TraceGuard(max_retraces=0, name="bench_serving") as tg:
+        snap = run()                        # fresh engine: wrappers must hit
+    rows = [["trace_guard", 0, f"retraces={tg.total}",
+             f"steps={snap.steps}", f"completed={snap.completed}"]]
+    summary = {"retraces": tg.total, "traces": tg.traces,
+               "compiles": tg.compiles, "completed": snap.completed}
+    return rows, summary
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -288,6 +320,8 @@ def main(argv=None):
     prefix_rows, prefix_summary = bench_prefix_caching(cfg, model, params,
                                                        smoke=args.smoke)
     rows += prefix_rows
+    guard_rows, guard_summary = bench_trace_guard(cfg, model, params)
+    rows += guard_rows
     if not args.smoke:
         rows += bench_load_sweep(cfg, model, params)
     width = max(len(r) for r in rows)
@@ -300,6 +334,7 @@ def main(argv=None):
         "rows": [[str(x) for x in r] for r in rows],
         "paged_vs_dense": paged_summary,
         "prefix_caching": prefix_summary,
+        "trace_guard": guard_summary,
     }, indent=2) + "\n")
     print(f"wrote {out}")
 

@@ -14,6 +14,16 @@ from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
                         bench_scale, bench_schedules, bench_serving,
                         bench_spec, bench_thermal, bench_tool_parallel,
                         bench_wire, roofline_report)
+from repro.analysis.lint import cli as lint_cli
+
+
+def _lint_entry() -> None:
+    # a broken analysis module fails CI like any other entry point; a
+    # dirty tree fails the run outright
+    n = lint_cli.run(["--strict"])
+    if n:
+        raise RuntimeError(f"repro-lint: {n} invariant violation(s)")
+
 
 ALL = {
     "devices": bench_devices.main,          # paper Table 1
@@ -31,6 +41,8 @@ ALL = {
     "spec": lambda: bench_spec.main([]),
     # production-scale fleet simulation (ROADMAP); same guard
     "scale": lambda: bench_scale.main([]),
+    # repro-lint invariants (R001-R006) over src/; see docs/INVARIANTS.md
+    "lint": _lint_entry,
 }
 
 

@@ -1,0 +1,24 @@
+"""repro-lint: the repo's invariant checker (rules R001-R006).
+
+Every rule encodes a bug class this repo actually shipped and fixed; the
+linter keeps the fix from regressing by machine-checking the invariant
+instead of trusting reviewer folklore.  See ``docs/INVARIANTS.md`` for the
+catalogue (rule -> originating PR -> approved pattern) and
+:mod:`repro.runtime.guard` for the runtime-side guards (retrace counting,
+seeded replay determinism).
+
+Pure stdlib on purpose: the CLI (``python -m repro.analysis.lint``) must
+run on CI's fast tier without jax, numpy, or an installed package —
+``PYTHONPATH=src`` and a checkout are enough.
+"""
+
+from repro.analysis.lint.core import (FILE_ALLOWLIST, RULES, Violation,
+                                      lint_paths, lint_source)
+from repro.analysis.lint.rules import (BACKEND_REQUIRED_ATTRS,
+                                       ENGINE_REQUIRED_ATTRS,
+                                       SIM_CLOCK_SCOPES)
+
+__all__ = [
+    "RULES", "Violation", "lint_paths", "lint_source", "FILE_ALLOWLIST",
+    "ENGINE_REQUIRED_ATTRS", "BACKEND_REQUIRED_ATTRS", "SIM_CLOCK_SCOPES",
+]

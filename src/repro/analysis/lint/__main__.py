@@ -1,0 +1,6 @@
+"""``python -m repro.analysis.lint`` entry point."""
+
+from repro.analysis.lint.cli import main
+
+if __name__ == "__main__":
+    main()

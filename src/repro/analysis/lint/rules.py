@@ -1,0 +1,475 @@
+"""The six repro-lint rules, each named for the PR whose bug it encodes.
+
+=====  =====================================================================
+R001   jit wrappers must be module-level or ``lru_cache``-shared (PR 4:
+       per-instance ``jax.jit`` silently recompiled identical programs per
+       fleet worker).
+R002   no wall-clock in sim-clock modules (PR 7: one ``time.sleep`` in a
+       sim path breaks the never-sleep contract; engines pace by
+       ``engine.clock``).
+R003   PRNG key discipline: a key variable may not feed two ``jax.random``
+       consumers without a rebind in between (PR 6: exactly one split per
+       emitted token, or spec/plain streams diverge).
+R004   no implicit host sync (``.item()``, ``int()/float()/bool()`` on a
+       variable, ``np.asarray``) inside ``*step*`` hot-path functions —
+       each sync stalls the decode loop for a device roundtrip.
+R005   anything calling itself an Engine/Backend must statically define the
+       protocol's required attributes (fleet code duck-types against them).
+R006   frozen snapshots (EngineSnapshot/FleetSnapshot/ScaleSnapshot/...)
+       are immutable outside their defining module — consumers fork with
+       ``dataclasses.replace``, never mutate.
+=====  =====================================================================
+
+See ``docs/INVARIANTS.md`` for the full catalogue with approved patterns.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.analysis.lint.core import (ClassInfo, FileContext, Violation,
+                                      rule)
+
+# ---------------------------------------------------------------------------
+# Shared configuration (kept here, dependency-free, so CI can lint without
+# importing jax; tests pin these against the runtime definitions).
+# ---------------------------------------------------------------------------
+
+#: module-path fragments whose code runs under a swappable sim clock.
+SIM_CLOCK_SCOPES = (
+    "repro/serving/",
+    "repro/runtime/elastic.py",
+    "repro/runtime/monitor.py",
+    "repro/offload/tools.py",  # tool-loop async path; allowlisted for R002
+)
+
+#: wall-clock calls banned inside sim-clock scopes.  ``time.perf_counter``
+#: is deliberately NOT here: it is the default wall clock engines are
+#: constructed with and the telemetry stamp — the ban is on *pacing* by
+#: wall time (sleep) and on non-injectable time/randomness sources.
+WALL_CLOCK_BANNED = {
+    "time.time": "wall-clock read; pace by engine.clock instead",
+    "time.sleep": "sim-clock paths must never sleep; advance the SimClock",
+    "datetime.datetime.now": "wall-clock read; pace by engine.clock instead",
+    "datetime.datetime.utcnow": "wall-clock read; pace by engine.clock instead",
+    "datetime.datetime.today": "wall-clock read; pace by engine.clock instead",
+    "datetime.date.today": "wall-clock read; pace by engine.clock instead",
+}
+
+#: mirror of ``repro.serving.engine_api.REQUIRED_ATTRS`` (pinned by test).
+ENGINE_REQUIRED_ATTRS = ("scheduler", "slots", "finished", "max_batch",
+                         "metrics")
+
+#: mirror of ``repro.serving.backends.CacheBackend.REQUIRED_ATTRS``.
+BACKEND_REQUIRED_ATTRS = ("name", "n_blocks", "state_version",
+                          "snapshot_free")
+
+#: frozen snapshot dataclasses and the modules allowed to touch their guts.
+SNAPSHOT_CLASSES = {
+    "EngineSnapshot", "FleetSnapshot", "ScaleSnapshot", "WorkerSnapshot",
+    "GroupSnapshot", "SpecSnapshot", "SLOReport", "ClassSLOReport",
+}
+SNAPSHOT_METHODS = {"snapshot", "metrics_snapshot"}
+SNAPSHOT_DEFINING_MODULES = (
+    "repro/serving/metrics.py",
+    "repro/serving/fleet.py",
+    "repro/serving/scale.py",
+)
+
+#: ``jax.random`` callables that mint keys rather than consume them.
+_KEY_CONSTRUCTORS = {"key", "PRNGKey", "wrap_key_data", "key_data", "clone",
+                     "key_impl"}
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_CACHE_DECORATORS = {"functools.lru_cache", "functools.cache", "lru_cache",
+                     "cache"}
+
+
+def _in_scope(ctx: FileContext, scopes) -> bool:
+    return any(frag in ctx.module if frag.endswith("/")
+               else ctx.module.endswith(frag) for frag in scopes)
+
+
+def _decorator_dotted(ctx: FileContext, dec: ast.AST) -> Optional[str]:
+    return ctx.dotted(dec.func if isinstance(dec, ast.Call) else dec)
+
+
+def _has_cache_decorator(ctx: FileContext, fn: ast.AST) -> bool:
+    decs = getattr(fn, "decorator_list", [])
+    return any(_decorator_dotted(ctx, d) in _CACHE_DECORATORS for d in decs)
+
+
+# ---------------------------------------------------------------------------
+# R001 — shared jit wrappers (PR 4)
+# ---------------------------------------------------------------------------
+
+
+@rule("R001", "jit wrappers must be module-level or lru_cache-shared")
+def r001_shared_jit(ctx: FileContext) -> Iterator[Violation]:
+    for node in ast.walk(ctx.tree):
+        what, where = None, node
+        if isinstance(node, ast.Call):
+            dn = ctx.dotted(node.func)
+            if dn in _JIT_NAMES:
+                what = f"`{dn}(...)`"
+            elif dn == "functools.partial" and node.args and \
+                    ctx.dotted(node.args[0]) in _JIT_NAMES:
+                what = "`functools.partial(jax.jit, ...)`"
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _decorator_dotted(ctx, dec) in _JIT_NAMES:
+                    what = f"`@jax.jit` on `{node.name}`"
+                    where = dec  # report (and pragma-match) at the decorator
+        if what is None:
+            continue
+        scopes = ctx.scopes(node)
+        if not scopes:
+            continue  # module level: the approved pattern
+        funcs = [s for s in scopes
+                 if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda))]
+        in_class = any(isinstance(s, ast.ClassDef) for s in scopes)
+        if in_class:
+            yield Violation(
+                "R001", ctx.path, where.lineno, where.col_offset,
+                f"{what} created inside a class scope: per-instance jit "
+                "wrappers recompile one program per object (PR 4's fleet "
+                "recompile bug). Hoist to module level or an "
+                "@functools.lru_cache factory keyed on the config.")
+        elif not any(_has_cache_decorator(ctx, f) for f in funcs):
+            yield Violation(
+                "R001", ctx.path, where.lineno, where.col_offset,
+                f"{what} created inside a function without lru_cache "
+                "sharing: every call builds a fresh wrapper and retraces. "
+                "Hoist to module level or wrap the factory in "
+                "@functools.lru_cache.")
+
+
+# ---------------------------------------------------------------------------
+# R002 — never-sleep / no wall clock in sim modules (PR 7)
+# ---------------------------------------------------------------------------
+
+
+@rule("R002", "no wall-clock (time.time/sleep, datetime.now, random) in "
+              "sim-clock modules")
+def r002_no_wall_clock(ctx: FileContext) -> Iterator[Violation]:
+    if not _in_scope(ctx, SIM_CLOCK_SCOPES):
+        return
+    seen: Set[int] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.Attribute, ast.Name)):
+            continue
+        # skip attribute sub-chains so `time.sleep` reports once
+        parent = getattr(node, "_repro_parent", None)
+        if isinstance(parent, ast.Attribute):
+            continue
+        dn = ctx.dotted(node)
+        if dn is None:
+            continue
+        why = WALL_CLOCK_BANNED.get(dn)
+        if why is None and (dn == "random" or dn.startswith("random.")):
+            why = ("stdlib random is process-global and unseedable per "
+                   "lane; use a seeded numpy Generator or jax.random key")
+        if why is None:
+            continue
+        if node.lineno in seen:
+            continue
+        seen.add(node.lineno)
+        yield Violation(
+            "R002", ctx.path, node.lineno, node.col_offset,
+            f"`{dn}` in a sim-clock module: {why} (PR 7's never-sleep "
+            "contract; see docs/INVARIANTS.md#r002).")
+
+
+# ---------------------------------------------------------------------------
+# R003 — PRNG key discipline (PR 6)
+# ---------------------------------------------------------------------------
+
+
+def _key_consumers(ctx: FileContext, expr: ast.AST):
+    """Yield (call, [Name args]) for jax.random consumers inside expr."""
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = ctx.dotted(node.func)
+        if not dn or not dn.startswith("jax.random."):
+            continue
+        if dn.rsplit(".", 1)[1] in _KEY_CONSTRUCTORS:
+            continue
+        # by jax.random convention the key is the first positional arg
+        # (or the `key=`/`seed=` kwarg); other args are data, not keys.
+        candidates: List[ast.AST] = []
+        if node.args:
+            candidates.append(node.args[0])
+        candidates.extend(kw.value for kw in node.keywords
+                          if kw.arg in ("key", "seed", "rng"))
+        names = [a for a in candidates if isinstance(a, ast.Name)]
+        yield node, dn, names
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    for tgt in targets:
+        if isinstance(tgt, ast.Name):
+            out.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            out.update(el.id for el in tgt.elts if isinstance(el, ast.Name))
+    return out
+
+
+def _scan_keys(ctx: FileContext, body: List[ast.stmt],
+               consumed: Dict[str, int]) -> Iterator[Violation]:
+    """Linear scan: a Name consumed twice with no rebind in between fires.
+
+    Branch bodies are scanned with *copies* of the consumed-set and never
+    merged back, so cross-branch reuse is not flagged (conservative: no
+    false positives from mutually exclusive paths).
+    """
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield from _scan_keys(ctx, stmt.body, {})
+            continue
+        if isinstance(stmt, ast.ClassDef):
+            yield from _scan_keys(ctx, stmt.body, {})
+            continue
+        # header expressions evaluate in the current state
+        if isinstance(stmt, ast.If):
+            headers, blocks = [stmt.test], [stmt.body, stmt.orelse]
+        elif isinstance(stmt, ast.While):
+            headers, blocks = [stmt.test], [stmt.body, stmt.orelse]
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            headers, blocks = [stmt.iter], [stmt.body, stmt.orelse]
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            headers, blocks = [i.context_expr for i in stmt.items], [stmt.body]
+        elif isinstance(stmt, ast.Try):
+            headers, blocks = [], [stmt.body, stmt.orelse, stmt.finalbody] + \
+                [h.body for h in stmt.handlers]
+        else:
+            headers, blocks = [stmt], []
+        for header in headers:
+            for call, dn, names in _key_consumers(ctx, header):
+                for name in names:
+                    prev = consumed.get(name.id)
+                    if prev is not None:
+                        yield Violation(
+                            "R003", ctx.path, call.lineno, call.col_offset,
+                            f"PRNG key `{name.id}` passed to `{dn}` but "
+                            f"already consumed on line {prev} with no "
+                            "rebind in between: reusing a key replays the "
+                            "same randomness (PR 6's one-split-per-token "
+                            "contract). Rebind first, e.g. "
+                            f"`{name.id}, sub = jax.random.split({name.id})`.")
+                    else:
+                        consumed[name.id] = call.lineno
+        if not blocks:
+            # rebinds clear consumption AFTER the statement's own uses, so
+            # `kk, sub = jax.random.split(kk)` is the approved pattern.
+            for name in _assigned_names(stmt):
+                consumed.pop(name, None)
+        for block in blocks:
+            if block:
+                yield from _scan_keys(ctx, block, dict(consumed))
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            # loop bodies may rebind; drop anything the body assigns
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.stmt):
+                    for name in _assigned_names(sub):
+                        consumed.pop(name, None)
+
+
+@rule("R003", "a jax.random key may not feed two consumers without a rebind")
+def r003_key_discipline(ctx: FileContext) -> Iterator[Violation]:
+    yield from _scan_keys(ctx, ctx.tree.body, {})
+
+
+# ---------------------------------------------------------------------------
+# R004 — no implicit host sync in hot-path *step* functions (PRs 2/6)
+# ---------------------------------------------------------------------------
+
+_CASTS = {"int", "float", "bool"}
+
+
+@rule("R004", "no implicit host sync (.item(), int()/float()/bool(), "
+              "np.asarray) in *step* hot paths")
+def r004_no_host_sync(ctx: FileContext) -> Iterator[Violation]:
+    if not ctx.imports_jax:
+        return  # jax-free modules have no device arrays to sync
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if "step" not in fn.name.lower():
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            # x.item()
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                yield Violation(
+                    "R004", ctx.path, node.lineno, node.col_offset,
+                    f"`.item()` inside hot-path `{fn.name}`: each call "
+                    "blocks on a device->host roundtrip per token. Batch "
+                    "the transfer (one np.asarray per step outside the "
+                    "lane loop) or keep the value on device.")
+                continue
+            dn = ctx.dotted(node.func)
+            if dn in ("numpy.asarray", "numpy.array"):
+                # building an array FROM host literals is not a sync
+                if node.args and isinstance(
+                        node.args[0], (ast.List, ast.Tuple, ast.Dict,
+                                       ast.ListComp, ast.GeneratorExp,
+                                       ast.Constant)):
+                    continue
+                yield Violation(
+                    "R004", ctx.path, node.lineno, node.col_offset,
+                    f"`np.asarray` inside hot-path `{fn.name}`: implicit "
+                    "device sync. Hoist the single allowed sync out of "
+                    "the per-lane loop, or mark the deliberate sync "
+                    "point with a pragma.")
+                continue
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _CASTS
+                    and node.func.id not in ctx.aliases
+                    and len(node.args) == 1
+                    and isinstance(node.args[0],
+                                   (ast.Name, ast.Attribute, ast.Subscript))):
+                yield Violation(
+                    "R004", ctx.path, node.lineno, node.col_offset,
+                    f"`{node.func.id}(...)` on a variable inside hot-path "
+                    f"`{fn.name}`: casting a device array is an implicit "
+                    "host sync per element. Use `.tolist()` once per "
+                    "step, or pragma the deliberate sync point.")
+
+
+# ---------------------------------------------------------------------------
+# R005 — Engine/Backend classes must define the protocol attrs (PRs 3/6)
+# ---------------------------------------------------------------------------
+
+
+def _resolved_attrs(index: Dict[str, ClassInfo], name: str,
+                    seen: Optional[Set[str]] = None):
+    """(attrs, fully_resolved) walking the base chain through the index."""
+    seen = seen or set()
+    if name in seen:
+        return set(), True
+    seen.add(name)
+    info = index.get(name)
+    if info is None:
+        return set(), name == "object"
+    attrs = set(info.attrs)
+    resolved = True
+    for base in info.bases:
+        if base in ("object", "Protocol", "Generic", "ABC"):
+            continue
+        sub, ok = _resolved_attrs(index, base, seen)
+        attrs |= sub
+        resolved = resolved and ok
+    return attrs, resolved
+
+
+@rule("R005", "Engine/Backend classes must statically define the "
+              "protocol's REQUIRED_ATTRS")
+def r005_protocol_attrs(ctx: FileContext) -> Iterator[Violation]:
+    index: Dict[str, ClassInfo] = getattr(ctx, "index", {})
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        info = index.get(node.name)
+        if info is None or info.is_protocol:
+            continue
+        claims = None
+        if node.name.endswith("Engine"):
+            claims, required = "DecodeEngine", ENGINE_REQUIRED_ATTRS
+        elif node.name.endswith("Backend"):
+            claims, required = "CacheBackend", BACKEND_REQUIRED_ATTRS
+        if claims is None:
+            continue
+        attrs, resolved = _resolved_attrs(index, node.name)
+        if not resolved:
+            continue  # opaque external base: cannot prove either way
+        missing = [a for a in required if a not in attrs]
+        if missing:
+            yield Violation(
+                "R005", ctx.path, node.lineno, node.col_offset,
+                f"class `{node.name}` claims the {claims} protocol but "
+                f"never defines {missing}: fleet code duck-types against "
+                f"REQUIRED_ATTRS and will fail at routing time, not "
+                "construction time. Define them in __init__ or at class "
+                "level.")
+
+
+# ---------------------------------------------------------------------------
+# R006 — frozen snapshots are immutable outside their defining module
+# ---------------------------------------------------------------------------
+
+
+def _snapshot_sources(ctx: FileContext, value: ast.AST) -> bool:
+    """True if `value` constructs a snapshot or calls a .snapshot() method."""
+    if not isinstance(value, ast.Call):
+        return False
+    fn = value.func
+    if isinstance(fn, ast.Name) and fn.id in SNAPSHOT_CLASSES:
+        return True
+    if isinstance(fn, ast.Attribute):
+        if fn.attr in SNAPSHOT_CLASSES or fn.attr in SNAPSHOT_METHODS:
+            return True
+    return False
+
+
+@rule("R006", "frozen snapshot dataclasses are immutable outside their "
+              "defining module")
+def r006_snapshot_immutable(ctx: FileContext) -> Iterator[Violation]:
+    if any(ctx.module.endswith(m) for m in SNAPSHOT_DEFINING_MODULES):
+        return
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Module)):
+            continue
+        body = fn.body if not isinstance(fn, ast.Module) else [
+            s for s in fn.body
+            if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef))]
+        tracked: Set[str] = set()
+        for stmt in body if isinstance(fn, ast.Module) else ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and _snapshot_sources(
+                    ctx, stmt.value):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        tracked.add(tgt.id)
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for tgt in targets:
+                    if not isinstance(tgt, ast.Attribute):
+                        continue
+                    hit = (isinstance(tgt.value, ast.Name)
+                           and tgt.value.id in tracked) or \
+                        _snapshot_sources(ctx, tgt.value)
+                    if hit:
+                        yield Violation(
+                            "R006", ctx.path, stmt.lineno, stmt.col_offset,
+                            f"mutating snapshot field `.{tgt.attr}`: "
+                            "snapshots are frozen telemetry records shared "
+                            "across consumers; fork with "
+                            "`dataclasses.replace(snap, ...)` instead.")
+            # only the Expr wrapper, not the Call it contains: ast.walk
+            # visits both and matching either would double-report
+            call = stmt.value if (isinstance(stmt, ast.Expr)
+                                  and isinstance(stmt.value, ast.Call)) \
+                else None
+            if call is not None:
+                dn = ctx.dotted(call.func)
+                if dn == "object.__setattr__" and call.args and \
+                        isinstance(call.args[0], ast.Name) and \
+                        call.args[0].id in tracked:
+                    yield Violation(
+                        "R006", ctx.path, stmt.lineno, stmt.col_offset,
+                        "`object.__setattr__` on a frozen snapshot "
+                        "outside its defining module: fork with "
+                        "`dataclasses.replace` instead.")

@@ -61,6 +61,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         built = make_step(cfg, shape, rcfg, mesh, strategy=strategy)
         cell["strategy"] = built["meta"]["strategy"]
         with mesh:
+            # repro-lint: allow[R001] dry-run measures compile cost; one fresh program per cell is the point
             jitted = jax.jit(built["fn"],
                              in_shardings=built["in_shardings"],
                              out_shardings=built["out_shardings"],

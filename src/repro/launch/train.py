@@ -59,6 +59,7 @@ def main():
           f"strategy={args.strategy}")
 
     if args.strategy == "single":
+        # repro-lint: allow[R001] launcher entry point: one training program per process run, nothing to share
         @jax.jit
         def step_fn(params, opt, batch):
             (loss, m), g = jax.value_and_grad(
@@ -76,6 +77,7 @@ def main():
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
         built = make_train_step(cfg, shape, rcfg, mesh, opt_cfg,
                                 strategy=args.strategy)
+        # repro-lint: allow[R001] launcher entry point: one training program per process run, nothing to share
         jitted = jax.jit(built["fn"], in_shardings=built["in_shardings"],
                          out_shardings=built["out_shardings"])
 

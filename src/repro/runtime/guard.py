@@ -1,0 +1,232 @@
+"""Runtime invariant guards: retrace counting and seeded-replay checks.
+
+The static side of repro-lint (R001-R006) proves the *source* can't
+recreate the repo's known bug classes; this module proves the *running
+program* doesn't either:
+
+* :class:`TraceGuard` hooks JAX's compilation logging and counts every
+  trace/compile inside a ``with`` block.  Wrapped around steady-state
+  serving (after warmup), ``max_retraces=0`` turns PR 4's silent
+  per-worker recompiles into a hard failure with the offending program
+  names in the message.
+
+* :func:`seeded_replay_check` runs a seeded simulation twice and diffs
+  the snapshots field-by-field (NaN-aware).  Any divergence means hidden
+  wall-clock or global-RNG state leaked into a sim path — the runtime
+  face of R002/R003.
+
+``TraceGuard`` imports jax lazily; ``seeded_replay_check`` needs neither
+jax nor numpy unless the snapshots contain arrays, so the jax-free scale
+plane (``serving/scale.py``) can use it too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+from typing import Any, Callable, List, Optional, Tuple
+
+__all__ = ["TraceGuard", "RetraceError", "DeterminismError",
+           "seeded_replay_check", "diff_snapshots"]
+
+
+# ---------------------------------------------------------------------------
+# TraceGuard
+# ---------------------------------------------------------------------------
+
+
+class RetraceError(AssertionError):
+    """Raised when a TraceGuard block traced/compiled more than allowed."""
+
+
+#: loggers that carry compile activity across the jax versions CI runs
+#: (dispatch logs "Finished tracing + transforming <name> ...", pxla logs
+#: "Compiling <name> with global shapes and types ...").
+_JAX_COMPILE_LOGGERS = (
+    "jax._src.dispatch",
+    "jax._src.interpreters.pxla",
+    "jax._src.pjit",
+)
+
+
+class _CompileLogHandler(logging.Handler):
+    def __init__(self) -> None:
+        super().__init__(level=logging.DEBUG)
+        self.traces: List[str] = []
+        self.compiles: List[str] = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if "Finished tracing + transforming" in msg:
+            self.traces.append(msg)
+        elif msg.startswith("Compiling "):
+            self.compiles.append(msg)
+
+
+class TraceGuard:
+    """Context manager asserting a bound on jax traces/compiles inside it.
+
+    Usage::
+
+        run()                                # warmup: compile everything
+        with TraceGuard(max_retraces=0) as tg:
+            run()                            # steady state: must all hit
+        assert tg.total == 0
+
+    On exit the guard restores ``jax_log_compiles`` and detaches its log
+    handlers; with ``max_retraces=None`` it only observes (read
+    ``tg.total`` / ``tg.events`` afterwards).  Retraces are counted as
+    trace *or* compile log events — a cache hit emits neither.
+    """
+
+    def __init__(self, max_retraces: Optional[int] = 0,
+                 name: str = "steady-state") -> None:
+        self.max_retraces = max_retraces
+        self.name = name
+        self._handler = _CompileLogHandler()
+        self._prev_flag: Optional[bool] = None
+        self._loggers: List[logging.Logger] = []
+
+    # -- results -------------------------------------------------------
+
+    @property
+    def traces(self) -> int:
+        return len(self._handler.traces)
+
+    @property
+    def compiles(self) -> int:
+        return len(self._handler.compiles)
+
+    @property
+    def total(self) -> int:
+        """Retrace events observed (traces + compiles)."""
+        return self.traces + self.compiles
+
+    @property
+    def events(self) -> List[str]:
+        return list(self._handler.traces) + list(self._handler.compiles)
+
+    # -- context -------------------------------------------------------
+
+    def __enter__(self) -> "TraceGuard":
+        import jax
+        self._prev_flag = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        for name in _JAX_COMPILE_LOGGERS:
+            logger = logging.getLogger(name)
+            logger.addHandler(self._handler)
+            self._loggers.append(logger)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        import jax
+        for logger in self._loggers:
+            logger.removeHandler(self._handler)
+        self._loggers.clear()
+        jax.config.update("jax_log_compiles", bool(self._prev_flag))
+        if exc_type is not None:
+            return  # don't mask the block's own failure
+        self.check()
+
+    def check(self) -> None:
+        """Raise :class:`RetraceError` if the budget was exceeded."""
+        if self.max_retraces is None or self.total <= self.max_retraces:
+            return
+        head = "; ".join(self.events[:5])
+        more = f" (+{len(self.events) - 5} more)" if len(self.events) > 5 else ""
+        raise RetraceError(
+            f"TraceGuard[{self.name}]: {self.total} trace/compile event(s) "
+            f"observed, budget {self.max_retraces}. A warm serving path "
+            "must reuse shared jit wrappers (repro-lint R001); new traces "
+            f"here mean a recompile per worker/step. Events: {head}{more}")
+
+
+# ---------------------------------------------------------------------------
+# seeded replay determinism
+# ---------------------------------------------------------------------------
+
+
+class DeterminismError(AssertionError):
+    """Raised when two identically-seeded runs produced different results."""
+
+
+def _is_nan(x: Any) -> bool:
+    return isinstance(x, float) and math.isnan(x)
+
+
+def diff_snapshots(a: Any, b: Any, path: str = "",
+                   out: Optional[List[str]] = None,
+                   limit: int = 20) -> List[str]:
+    """Recursive NaN-aware structural diff; returns dotted paths that
+    differ (empty list == identical)."""
+    out = out if out is not None else []
+    if len(out) >= limit:
+        return out
+    where = path or "<root>"
+    if dataclasses.is_dataclass(a) and dataclasses.is_dataclass(b):
+        if type(a) is not type(b):
+            out.append(f"{where}: {type(a).__name__} != {type(b).__name__}")
+            return out
+        for f in dataclasses.fields(a):
+            diff_snapshots(getattr(a, f.name), getattr(b, f.name),
+                           f"{path}.{f.name}" if path else f.name, out, limit)
+        return out
+    if isinstance(a, dict) and isinstance(b, dict):
+        if set(a) != set(b):
+            out.append(f"{where}: keys {sorted(set(a) ^ set(b))!r} differ")
+            return out
+        for k in a:
+            diff_snapshots(a[k], b[k], f"{path}[{k!r}]", out, limit)
+        return out
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        if len(a) != len(b):
+            out.append(f"{where}: length {len(a)} != {len(b)}")
+            return out
+        for i, (x, y) in enumerate(zip(a, b)):
+            diff_snapshots(x, y, f"{path}[{i}]", out, limit)
+        return out
+    if _is_nan(a) and _is_nan(b):
+        return out
+    if hasattr(a, "shape") and hasattr(a, "dtype"):  # ndarray-likes
+        try:
+            import numpy as np
+            if not (hasattr(b, "shape") and a.shape == b.shape
+                    and np.array_equal(np.asarray(a), np.asarray(b),
+                                       equal_nan=True)):
+                out.append(f"{where}: arrays differ")
+        except Exception:
+            out.append(f"{where}: unorderable array-likes")
+        return out
+    if a != b:
+        out.append(f"{where}: {a!r} != {b!r}")
+    return out
+
+
+def seeded_replay_check(fn: Callable[[int], Any], seed: int = 0, *,
+                        runs: int = 2,
+                        strict: bool = True) -> Tuple[bool, List[str]]:
+    """Run ``fn(seed)`` ``runs`` times and diff the returned snapshots.
+
+    ``fn`` must build its ENTIRE simulation from the seed — any hidden
+    wall-clock read or process-global RNG shows up as a diff.  Returns
+    ``(ok, diffs)``; with ``strict=True`` (default) raises
+    :class:`DeterminismError` on divergence instead.
+    """
+    if runs < 2:
+        raise ValueError("seeded_replay_check needs at least 2 runs")
+    snaps = [fn(seed) for _ in range(runs)]
+    diffs: List[str] = []
+    for i, later in enumerate(snaps[1:], start=2):
+        for d in diff_snapshots(snaps[0], later):
+            diffs.append(f"run1 vs run{i}: {d}")
+    ok = not diffs
+    if not ok and strict:
+        shown = "\n  ".join(diffs[:20])
+        raise DeterminismError(
+            f"seeded replay diverged for seed={seed} "
+            f"({len(diffs)} difference(s)):\n  {shown}\n"
+            "A seeded sim must be a pure function of its seed — hidden "
+            "wall-clock reads or global RNG state violate repro-lint "
+            "R002/R003's runtime contract.")
+    return ok, diffs

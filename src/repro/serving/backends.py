@@ -233,6 +233,11 @@ _POOL_COW_COPY = jax.jit(_pool_cow_copy, donate_argnums=0)
 class CacheBackend:
     """Base class: the dense-lane defaults every layout can fall back on."""
 
+    #: attributes fleet/engine code duck-types against on ANY backend; a
+    #: subclass may shadow them but must never delete them (repro-lint
+    #: R005 checks this statically for every ``*Backend`` class).
+    REQUIRED_ATTRS = ("name", "n_blocks", "state_version", "snapshot_free")
+
     name = "dense"
 
     def __init__(self, model: Model, n_lanes: int, max_len: int):
@@ -416,6 +421,7 @@ class RecurrentBackend(DenseBackend):
         # valid — appending columns never changes tokens[:, :keep].
         if self._stash_tokens is not None:
             self._stash_tokens = np.concatenate(
+                # repro-lint: allow[R004] tokens is the host-side input batch; extends the host rollback record, no device transfer
                 [self._stash_tokens, np.asarray(tokens)], axis=1)
         return super().step(params, tokens, active)
 
@@ -427,6 +433,7 @@ class RecurrentBackend(DenseBackend):
         copy of the pre-window cache (the window jit must therefore not
         donate its cache argument) and replay from it on rollback."""
         self._stash = jax.tree.map(np.asarray, self.cache)
+        # repro-lint: allow[R004] tokens is the host-side window batch; the stash above is the one deliberate sync per verify window
         self._stash_tokens = np.asarray(tokens)
         self._stash_params = params
         self._replay_memo = {}

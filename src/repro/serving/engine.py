@@ -561,13 +561,16 @@ class ServeEngine:
         active = np.asarray([s is not None for s in self.slots])
         logits = self.backend.step(self.params, toks, active)
         ls = self.lane_sampling
-        nxt = self.sampler.sample(logits[:, :self.vocab])
+        # one host transfer per step: Sampler.sample returns host numpy;
+        # tolist() converts the whole batch at once so the per-lane loop
+        # below never touches an array element-wise (repro-lint R004)
+        nxt = self.sampler.sample(logits[:, :self.vocab]).tolist()
         now = self._now()
         busy = self.active()          # before the finish-scan frees lanes
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(nxt[i])
+            tok = nxt[i]
             req.out_tokens.append(tok)
             if req.first_token_t is None:   # prefill-skipping admissions
                 req.first_token_t = now

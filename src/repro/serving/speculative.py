@@ -203,6 +203,7 @@ class SpecEngine(ServeEngine):
                                                   active)
         drafted = np.zeros((b, k), np.int32)
         drafted[:, 0] = self.draft_sampler.sample(
+            # repro-lint: allow[R004] one batched draft-logits transfer per round
             np.asarray(d_logits)[:, 0, :self.vocab], mask=active)
         for j in range(1, k + 1):
             # step j writes t_j; its logits propose t_{j+1}.  The last
@@ -213,6 +214,7 @@ class SpecEngine(ServeEngine):
                 self.draft_params, drafted[:, j - 1:j], active)
             if j < k:
                 drafted[:, j] = self.draft_sampler.sample(
+                    # repro-lint: allow[R004] one batched transfer per draft step
                     np.asarray(step_logits)[:, :self.vocab], mask=active)
 
         # ---- drafted tokens cross the wire (draft -> target) ----------
@@ -241,6 +243,7 @@ class SpecEngine(ServeEngine):
         active = np.asarray([s is not None for s in self.slots])
         if not active.any():
             return rep
+        # repro-lint: allow[R004] the round's one verify-logits transfer to the host sampler
         w_logits = np.asarray(
             self.backend.verify_step(self.params, window, active))
 
@@ -265,7 +268,7 @@ class SpecEngine(ServeEngine):
         for i, req in enumerate(self.slots):
             if req is None or not active[i]:
                 continue
-            n = int(n_emitted[i])
+            n = int(n_emitted[i])  # repro-lint: allow[R004] n_emitted is host numpy from Sampler.accept; dtype cast, not a sync
             self.backend.rollback(i, w - n)
             self.draft_backend.rollback(i, w - n)
             req.out_tokens.extend(emitted[i])

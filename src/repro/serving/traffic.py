@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -204,8 +203,7 @@ class SimClock:
 
 def drive_open_loop(engine: ServeEngine, arrival_times: Sequence[float],
                     submit: Callable[[int, float], None], *,
-                    max_sleep_s: float = 0.01,
-                    wall_clock: Optional[bool] = None) -> float:
+                    max_sleep_s: float = 0.01) -> float:
     """Run ``engine`` until every arrival is submitted and drained.
 
     ``arrival_times`` are seconds from start, sorted ascending;
@@ -219,22 +217,13 @@ def drive_open_loop(engine: ServeEngine, arrival_times: Sequence[float],
     clock the driver jumps time forward to the next arrival and never
     sleeps — a sim-paced drive costs compute time only, regardless of the
     trace's simulated span.  Sim clocks must expose ``advance(dt)``
-    (see :class:`SimClock`).
+    (see :class:`SimClock`).  Returns elapsed seconds on the pacing clock.
 
-    ``wall_clock=True`` forces the legacy always-wall pacing and is
-    deprecated: it busy-naps real seconds even when the engine itself runs
-    in simulated time.  Returns elapsed seconds on the pacing clock.
+    The legacy ``wall_clock=`` kwarg (deprecated in PR 7) is gone: pacing
+    is always ``engine.clock``, which is the never-sleep invariant
+    repro-lint R002 enforces statically.
     """
-    if wall_clock is not None:
-        warnings.warn(
-            "drive_open_loop(wall_clock=...) is deprecated: the driver now "
-            "paces by engine.clock, so sim-time engines never sleep",
-            DeprecationWarning, stacklevel=2)
-    clock: Callable[[], float]
-    if wall_clock:
-        clock = time.perf_counter
-    else:
-        clock = engine.clock
+    clock: Callable[[], float] = engine.clock
     simulated = clock is not time.perf_counter
     t0 = clock()
     n, nxt = len(arrival_times), 0
@@ -256,7 +245,9 @@ def drive_open_loop(engine: ServeEngine, arrival_times: Sequence[float],
                         "tick-paced fleet with repro.serving.fleet.drive_sim)")
                 advance(wait)
             else:
-                time.sleep(min(wait, max_sleep_s))
+                # the ONE legitimate nap: a wall-clock engine idling until
+                # its next arrival really does wait in real time
+                time.sleep(min(wait, max_sleep_s))  # repro-lint: allow[R002] wall-clock engines nap for real; sim clocks take the advance() branch above
     return clock() - t0
 
 

@@ -1,0 +1,434 @@
+"""repro-lint: paired good/bad fixtures per rule, a whole-repo clean run,
+and the runtime guards (TraceGuard, seeded_replay_check).
+
+The static-rule tests are jax-free (they exercise the stdlib-only linter
+on source strings); only the TraceGuard tests import jax.
+"""
+
+from pathlib import Path
+from textwrap import dedent
+
+import pytest
+
+from repro.analysis.lint import (BACKEND_REQUIRED_ATTRS,
+                                 ENGINE_REQUIRED_ATTRS, lint_paths,
+                                 lint_source)
+from repro.analysis.lint.cli import run as lint_cli_run
+from repro.runtime.guard import (DeterminismError, RetraceError, TraceGuard,
+                                 diff_snapshots, seeded_replay_check)
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+#: a fixture module path inside R002's sim-clock scope
+SIM_MOD = "repro/serving/fixture.py"
+
+
+def rules_of(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# R001 — shared jit wrappers
+# ---------------------------------------------------------------------------
+
+
+def test_r001_flags_jit_in_init():
+    bad = dedent("""
+        import jax
+        class Worker:
+            def __init__(self, model):
+                self._step = jax.jit(model.apply)
+    """)
+    vs = lint_source(bad, rules=["R001"])
+    assert rules_of(vs) == ["R001"]
+    assert "class scope" in vs[0].message
+
+
+def test_r001_flags_jit_in_plain_function_and_partial():
+    bad = dedent("""
+        import functools
+        import jax
+        def build(fn):
+            return jax.jit(fn)
+        def build2(fn):
+            return functools.partial(jax.jit, static_argnums=0)(fn)
+    """)
+    vs = lint_source(bad, rules=["R001"])
+    assert len(vs) == 2
+
+
+def test_r001_flags_decorator_in_nested_scope():
+    bad = dedent("""
+        import jax
+        def main(model):
+            @jax.jit
+            def step(params, batch):
+                return params
+            return step
+    """)
+    vs = lint_source(bad, rules=["R001"])
+    assert len(vs) == 1
+
+
+def test_r001_allows_module_level_and_lru_cache_factory():
+    good = dedent("""
+        import functools
+        import jax
+
+        @jax.jit
+        def decode_one(params, tok):
+            return tok
+
+        shared = jax.jit(lambda x: x)
+
+        @functools.lru_cache(maxsize=32)
+        def jit_for(model, bucket):
+            return jax.jit(lambda p, x: model.apply(p, x))
+    """)
+    assert lint_source(good, rules=["R001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R002 — never-sleep / no wall clock in sim modules
+# ---------------------------------------------------------------------------
+
+
+def test_r002_flags_wall_clock_in_sim_scope():
+    bad = dedent("""
+        import time
+        import random
+        from datetime import datetime
+        def pace(engine):
+            time.sleep(0.1)
+            t = time.time()
+            r = random.random()
+            d = datetime.now()
+    """)
+    vs = lint_source(bad, module=SIM_MOD, rules=["R002"])
+    assert len(vs) == 4
+
+
+def test_r002_ignores_out_of_scope_and_perf_counter():
+    code = dedent("""
+        import time
+        def pace():
+            time.sleep(0.1)
+    """)
+    assert lint_source(code, module="repro/launch/fixture.py",
+                       rules=["R002"]) == []
+    good = dedent("""
+        import time
+        def stamp():
+            return time.perf_counter()
+    """)
+    assert lint_source(good, module=SIM_MOD, rules=["R002"]) == []
+
+
+def test_r002_pragma_needs_a_reason():
+    with_reason = dedent("""
+        import time
+        def pace():
+            time.sleep(0.1)  # repro-lint: allow[R002] wall engines nap for real
+    """)
+    assert lint_source(with_reason, module=SIM_MOD, rules=["R002"]) == []
+    without_reason = with_reason.replace(" wall engines nap for real", "")
+    vs = lint_source(without_reason, module=SIM_MOD, rules=["R002"])
+    assert len(vs) == 1 and "missing a reason" in vs[0].message
+
+
+def test_r002_tool_loop_async_path_is_allowlisted():
+    code = dedent("""
+        import time
+        def tool_call():
+            time.sleep(0.05)
+    """)
+    assert lint_source(code, module="repro/offload/tools.py",
+                       rules=["R002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R003 — PRNG key discipline
+# ---------------------------------------------------------------------------
+
+
+def test_r003_flags_key_reused_without_rebind():
+    bad = dedent("""
+        import jax
+        def sample(key, logits):
+            a = jax.random.categorical(key, logits)
+            b = jax.random.categorical(key, logits)
+            return a, b
+    """)
+    vs = lint_source(bad, rules=["R003"])
+    assert len(vs) == 1 and "rebind" in vs[0].message
+
+
+def test_r003_allows_split_rebind_idiom():
+    good = dedent("""
+        import jax
+        def sample(key, logits):
+            key, sub = jax.random.split(key)
+            a = jax.random.categorical(sub, logits)
+            key, sub = jax.random.split(key)
+            b = jax.random.categorical(sub, logits)
+            return a, b
+    """)
+    assert lint_source(good, rules=["R003"]) == []
+
+
+def test_r003_branches_do_not_cross_contaminate():
+    good = dedent("""
+        import jax
+        def sample(key, logits, greedy):
+            if greedy:
+                return jax.random.categorical(key, logits)
+            else:
+                return jax.random.categorical(key, logits / 2.0)
+    """)
+    assert lint_source(good, rules=["R003"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R004 — no implicit host sync in *step* hot paths
+# ---------------------------------------------------------------------------
+
+
+def test_r004_flags_item_cast_and_asarray_in_step():
+    bad = dedent("""
+        import jax
+        import numpy as np
+        def decode_step(logits, nxt):
+            x = logits.item()
+            tok = int(nxt[0])
+            host = np.asarray(logits)
+            return x, tok, host
+    """)
+    vs = lint_source(bad, rules=["R004"])
+    assert len(vs) == 3
+
+
+def test_r004_ignores_non_step_functions_and_jax_free_modules():
+    code = dedent("""
+        import jax
+        def finalize(logits):
+            return logits.item()
+    """)
+    assert lint_source(code, rules=["R004"]) == []
+    jax_free = dedent("""
+        def on_step(x):
+            return int(x)
+    """)
+    assert lint_source(jax_free, rules=["R004"]) == []
+
+
+def test_r004_allows_host_literal_asarray():
+    good = dedent("""
+        import jax
+        import numpy as np
+        def step(slots):
+            active = np.asarray([s is not None for s in slots])
+            return active
+    """)
+    assert lint_source(good, rules=["R004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R005 — Engine/Backend protocol attrs
+# ---------------------------------------------------------------------------
+
+
+def test_r005_flags_engine_missing_required_attrs():
+    bad = dedent("""
+        class BrokenEngine:
+            def __init__(self):
+                self.slots = []
+    """)
+    vs = lint_source(bad, rules=["R005"])
+    assert len(vs) == 1
+    for attr in ("scheduler", "finished", "max_batch", "metrics"):
+        assert attr in vs[0].message
+
+
+def test_r005_passes_complete_engine_and_inherited_backend():
+    good = dedent("""
+        class GoodEngine:
+            def __init__(self):
+                self.scheduler = None
+                self.slots = []
+                self.finished = []
+                self.max_batch = 4
+                self.metrics = None
+
+        class BaseBackend:
+            name = "base"
+            n_blocks = 0
+            state_version = 0
+            snapshot_free = False
+
+        class ChildBackend(BaseBackend):
+            name = "child"
+    """)
+    assert lint_source(good, rules=["R005"]) == []
+
+
+def test_r005_mirrors_runtime_required_attrs():
+    """The linter's hardcoded mirrors must track the runtime protocol."""
+    from repro.serving.backends import CacheBackend
+    from repro.serving.engine_api import REQUIRED_ATTRS
+    assert tuple(ENGINE_REQUIRED_ATTRS) == tuple(REQUIRED_ATTRS)
+    assert tuple(BACKEND_REQUIRED_ATTRS) == tuple(CacheBackend.REQUIRED_ATTRS)
+
+
+# ---------------------------------------------------------------------------
+# R006 — frozen snapshots are immutable outside their defining module
+# ---------------------------------------------------------------------------
+
+
+def test_r006_flags_snapshot_mutation():
+    bad = dedent("""
+        def tamper(engine):
+            snap = engine.metrics_snapshot()
+            snap.completed = 0
+            return snap
+    """)
+    vs = lint_source(bad, module="repro/launch/fixture.py", rules=["R006"])
+    assert len(vs) == 1 and "replace" in vs[0].message
+
+
+def test_r006_allows_replace_and_defining_module():
+    good = dedent("""
+        import dataclasses
+        def redact(engine):
+            snap = engine.metrics_snapshot()
+            return dataclasses.replace(snap, completed=0)
+    """)
+    assert lint_source(good, module="repro/launch/fixture.py",
+                       rules=["R006"]) == []
+    mutate = dedent("""
+        def fixup(engine):
+            snap = engine.metrics_snapshot()
+            snap.completed = 0
+    """)
+    assert lint_source(mutate, module="repro/serving/metrics.py",
+                       rules=["R006"]) == []
+
+
+def test_r006_flags_object_setattr_on_snapshot():
+    bad = dedent("""
+        def tamper(f):
+            snap = FleetSnapshot(sim_t=0.0)
+            object.__setattr__(snap, "completed", 9)
+    """)
+    vs = lint_source(bad, module="repro/launch/fixture.py", rules=["R006"])
+    assert len(vs) == 1
+
+
+# ---------------------------------------------------------------------------
+# The repo itself is clean
+# ---------------------------------------------------------------------------
+
+
+def test_whole_repo_lints_clean():
+    violations = lint_paths([SRC])
+    assert violations == [], "\n".join(v.format() for v in violations)
+
+
+def test_cli_strict_run_is_clean(capsys):
+    assert lint_cli_run(["--strict", str(SRC)]) == 0
+    out = capsys.readouterr().out
+    assert "0 violation(s)" in out
+
+
+# ---------------------------------------------------------------------------
+# TraceGuard
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def jitted_double():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones((4,)))  # warm the (4,) program
+    return f, jnp
+
+
+def test_trace_guard_warm_path_counts_zero(jitted_double):
+    f, jnp = jitted_double
+    with TraceGuard(max_retraces=0) as tg:
+        f(jnp.ones((4,)))
+    assert tg.total == 0 and tg.events == []
+
+
+def test_trace_guard_catches_deliberate_retrace(jitted_double):
+    f, jnp = jitted_double
+    with pytest.raises(RetraceError, match="recompile"):
+        with TraceGuard(max_retraces=0, name="deliberate") as tg:
+            f(jnp.ones((5,)))  # unseen shape: must retrace
+    assert tg.total >= 1
+
+
+def test_trace_guard_observe_mode_and_flag_restore(jitted_double):
+    import jax
+    f, jnp = jitted_double
+    before = jax.config.jax_log_compiles
+    with TraceGuard(max_retraces=None) as tg:
+        f(jnp.ones((6,)))  # retraces, but observe-only never raises
+    assert tg.total >= 1
+    assert jax.config.jax_log_compiles == before
+
+
+# ---------------------------------------------------------------------------
+# seeded_replay_check
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_replay_passes_for_pure_sim():
+    import numpy as np
+
+    def sim(seed):
+        rng = np.random.default_rng(seed)
+        return {"served": rng.integers(0, 100, size=8),
+                "p99": float(rng.random()), "empty_stat": float("nan")}
+
+    ok, diffs = seeded_replay_check(sim, seed=7)
+    assert ok and diffs == []
+
+
+def test_seeded_replay_catches_hidden_state():
+    calls = []
+
+    def impure(seed):
+        calls.append(seed)
+        return {"n": len(calls)}
+
+    with pytest.raises(DeterminismError, match="seed=3"):
+        seeded_replay_check(impure, seed=3)
+    ok, diffs = seeded_replay_check(impure, seed=3, strict=False)
+    assert not ok and any("n" in d for d in diffs)
+
+
+def test_seeded_replay_on_sim_fleet_snapshot():
+    """End-to-end: the jax-free scale plane really is seed-deterministic."""
+    from repro.hw.specs import DeviceProfile
+    from repro.serving.scale import ScaleWorkerSpec, SimFleet, play
+    from repro.serving.traffic import poisson_trace
+
+    prof = DeviceProfile(name="sim", year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=20.0,
+                         prefill_tokens_per_s=1e4)
+
+    def sim(seed):
+        trace = poisson_trace(rate_rps=30.0, duration_s=1.0, seed=seed)
+        fleet = SimFleet([ScaleWorkerSpec(profile=prof, max_batch=4)
+                          for _ in range(2)], tick_s=0.05)
+        play(fleet, trace)
+        return fleet.snapshot()
+
+    ok, diffs = seeded_replay_check(sim, seed=11)
+    assert ok, diffs
+
+
+def test_diff_snapshots_reports_paths():
+    diffs = diff_snapshots({"a": [1, 2], "b": 3}, {"a": [1, 5], "b": 3})
+    assert diffs and "a" in diffs[0]

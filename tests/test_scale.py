@@ -260,9 +260,11 @@ def test_drive_open_loop_sim_clock_advances_instead_of_sleeping(monkeypatch):
     assert elapsed >= 9.0                          # jumped, not napped
 
 
-def test_drive_open_loop_wall_clock_kw_is_deprecated():
+def test_drive_open_loop_wall_clock_kw_is_gone():
+    # deprecated in PR 7, removed with repro-lint R002: pacing is always
+    # engine.clock, so the legacy escape hatch must not silently return
     eng = _StubEngine(SimClock())
-    with pytest.warns(DeprecationWarning, match="wall_clock"):
+    with pytest.raises(TypeError, match="wall_clock"):
         drive_open_loop(eng, [0.0], lambda i, now: None, wall_clock=False)
 
 
