@@ -1,0 +1,209 @@
+"""Chaos bench: the CI gate for the failure plane.
+
+Two sections:
+
+1. **fleet** (real engines) — a 3-worker ServingFleet serving mixed
+   greedy/sampled traffic eats a seeded kill trace with >= 2 mid-decode
+   deaths.  Asserted (regression-banded in ``baselines/faults.json``):
+   ZERO lost requests, every output token-identical to an unkilled
+   single-engine reference, recompute bounded by the checkpoint cadence
+   (tokens-since-checkpoint + context re-prefill per stranded lane), and
+   no parked orphans at drain.
+2. **scale** (jax-free SimFleet) — 60 simulated workers, ~600 requests,
+   a 12-kill trace mixing crash / partition / zombie.  Asserted: zero
+   lost, loop and vector tick implementations bit-identical under kills,
+   and bounded recompute at fleet scale.
+
+JSON lands in ``experiments/bench/faults.json`` and is gated by
+``benchmarks/check_regression.py`` against ``baselines/faults.json``.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit
+from repro.hw.specs import DeviceProfile
+from repro.runtime.faults import make_kill_trace
+from repro.serving.metrics import SLOClass
+from repro.serving.scale import ScaleWorkerSpec, SimFleet, make_rows
+
+MAX_LEN = 64
+MAX_NEW = 10
+N_REQUESTS = 8
+
+
+def _profile(name, rate=20.0):
+    return DeviceProfile(name=name, year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=rate,
+                         prefill_tokens_per_s=1e9)
+
+
+def bench_fleet(smoke: bool):
+    import jax
+    from repro.configs import RunConfig, get_config, reduced_config
+    from repro.models.api import build_model
+    from repro.serving.engine import ServeEngine
+    from repro.serving.failover import FailoverConfig
+    from repro.serving.fleet import ServingFleet, WorkerSpec, drive_sim
+    from repro.serving.sampling import SamplingParams
+
+    cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
+                              n_layers=2)
+    model = build_model(cfg, RunConfig(param_dtype="float32",
+                                      compute_dtype="float32", remat=False))
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6 + i).astype(np.int32)
+               for i in range(N_REQUESTS)]
+    samplings = [SamplingParams(temperature=2.0, top_k=32, seed=100 + i)
+                 if i % 2 else None for i in range(N_REQUESTS)]
+
+    # >= 2 deaths mid-decode, leaving "a" the sole survivor
+    trace = make_kill_trace(["b", "c"], 2, t0_s=0.4, t1_s=0.9, seed=1)
+    failover = FailoverConfig(checkpoint_every_s=0.5)
+    workers = [WorkerSpec(n, _profile(f"dev-{n}"), max_batch=4)
+               for n in ("a", "b", "c")]
+    fleet = ServingFleet(model, params, workers, max_len=MAX_LEN,
+                         tick_s=0.05, kill_trace=trace, failover=failover)
+    t0 = time.perf_counter()
+    arrivals = np.linspace(0.0, 0.3, N_REQUESTS)
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=MAX_NEW,
+                                     sampling=samplings[i]))
+    wall = time.perf_counter() - t0
+    snap = fleet.snapshot()
+
+    ref = ServeEngine(model, params, max_batch=N_REQUESTS, max_len=MAX_LEN)
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=MAX_NEW, sampling=sp)
+    want = {r.rid: list(r.out_tokens) for r in ref.run_until_drained()}
+    got = {rec.req.rid: list(rec.req.out_tokens) for rec in fleet.completed}
+    identical = got == want
+    lost = N_REQUESTS - snap.completed
+
+    # recompute bound: per stranded lane, at most one checkpoint window of
+    # decode (worst case the whole output) plus the context re-prefill
+    max_ctx = max(len(p) for p in prompts) + MAX_NEW
+    bound = snap.deaths * 4 * (MAX_NEW + max_ctx)
+    assert lost == 0, f"lost {lost} requests to the kill trace"
+    assert identical, "kill trace changed output tokens"
+    assert snap.deaths >= 2, f"need >= 2 deaths, got {snap.deaths}"
+    assert snap.resurrections >= 1, "no lane was resurrected"
+    assert snap.orphaned == 0, f"{snap.orphaned} requests still parked"
+    assert 0 < snap.recompute_tokens <= bound, (
+        f"recompute {snap.recompute_tokens} outside (0, {bound}]")
+
+    rows = [["faults_fleet", round(wall * 1e6, 0),
+             f"completed={snap.completed}", f"deaths={snap.deaths}",
+             f"resurrections={snap.resurrections}",
+             f"recompute={snap.recompute_tokens}",
+             f"identical={identical}"]]
+    summary = {
+        "completed": snap.completed,
+        "lost": lost,
+        "identical": identical,
+        "deaths": snap.deaths,
+        "resurrections": snap.resurrections,
+        "recompute_tokens": snap.recompute_tokens,
+        "recompute_bound": bound,
+        "orphaned": snap.orphaned,
+        "checkpoints": snap.checkpoints,
+        "dead_units": list(snap.dead_units),
+        "wall_s": wall,
+    }
+    return rows, summary
+
+
+def bench_scale(smoke: bool):
+    n_workers = 60
+    n_requests = 600 if not smoke else 300
+    n_kills = 12
+    spec = ScaleWorkerSpec(profile=_profile("phone-sim", rate=10.0),
+                           max_batch=4, max_queue=64)
+    trace = make_kill_trace(list(range(n_workers)), n_kills,
+                            t0_s=1.0, t1_s=20.0, seed=9,
+                            kinds=("crash", "partition", "zombie"),
+                            down_s=(0.5, 4.0))
+
+    def run(impl):
+        fleet = SimFleet(make_rows(spec, n_workers), tick_s=0.05,
+                         slo=(SLOClass("default"),), admission=False,
+                         kill_trace=trace, detect_s=0.5, ckpt_every_s=0.5,
+                         impl=impl)
+        rng = np.random.default_rng(5)
+        for p, m in zip(rng.integers(8, 48, n_requests),
+                        rng.integers(8, 48, n_requests)):
+            fleet.submit(int(p), int(m))
+        t0 = time.perf_counter()
+        while not fleet.idle() and fleet.ticks < 200_000:
+            fleet.tick()
+        return fleet, time.perf_counter() - t0
+
+    fleet, wall = run("vector")
+    loop_fleet, _ = run("loop")
+    snap, loop_snap = fleet.snapshot(), loop_fleet.snapshot()
+    identical = snap == loop_snap
+    lost = sum(1 for st in fleet.q_status if st < 0)
+
+    # every stranded lane redoes at most one checkpoint window of decode
+    # plus a prompt re-prefill (2x slack for tick granularity)
+    bound = snap.deaths * 4 * int(2 * 0.5 * 10.0 + 48 + 2)
+    assert lost == 0, f"{lost} requests never reached a terminal state"
+    assert identical, "loop and vector diverged under the kill trace"
+    assert snap.completed == snap.offered == n_requests
+    assert snap.deaths >= 2, f"need >= 2 deaths, got {snap.deaths}"
+    assert snap.orphaned == 0
+    assert 0 < snap.recompute_tokens <= bound, (
+        f"recompute {snap.recompute_tokens} outside (0, {bound}]")
+
+    rows = [["faults_scale", round(wall * 1e6, 0),
+             f"workers={n_workers}", f"offered={snap.offered}",
+             f"deaths={snap.deaths}",
+             f"resurrections={snap.resurrections}",
+             f"recompute={snap.recompute_tokens}",
+             f"identical={identical}"]]
+    summary = {
+        "workers": n_workers,
+        "offered": snap.offered,
+        "completed": snap.completed,
+        "lost": lost,
+        "identical": identical,
+        "deaths": snap.deaths,
+        "resurrections": snap.resurrections,
+        "recompute_tokens": snap.recompute_tokens,
+        "recompute_bound": bound,
+        "orphaned": snap.orphaned,
+        "wall_s": wall,
+    }
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized config (the asserts ARE the gate: zero "
+                         "lost, token-identical, bounded recompute)")
+    args = ap.parse_args(argv)
+    fleet_rows, fleet_summary = bench_fleet(args.smoke)
+    scale_rows, scale_summary = bench_scale(args.smoke)
+    rows = fleet_rows + scale_rows
+    width = max(len(r) for r in rows)
+    rows = [r + [""] * (width - len(r)) for r in rows]
+    emit("faults", rows,
+         ["name", "us"] + [f"d{i}" for i in range(1, width - 1)])
+    out = OUT_DIR / "faults.json"
+    out.write_text(json.dumps({
+        "smoke": args.smoke,
+        "rows": [[str(x) for x in r] for r in rows],
+        "fleet": fleet_summary,
+        "scale": scale_summary,
+    }, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

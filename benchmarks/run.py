@@ -10,10 +10,10 @@ registry without running anything — CI's cheap import-breakage smoke.
 import sys
 import traceback
 
-from benchmarks import (bench_devices, bench_kernels, bench_pipeline,
-                        bench_scale, bench_schedules, bench_serving,
-                        bench_spec, bench_thermal, bench_tool_parallel,
-                        bench_wire, roofline_report)
+from benchmarks import (bench_devices, bench_faults, bench_kernels,
+                        bench_pipeline, bench_scale, bench_schedules,
+                        bench_serving, bench_spec, bench_thermal,
+                        bench_tool_parallel, bench_wire, roofline_report)
 from repro.analysis.lint import cli as lint_cli
 
 
@@ -41,6 +41,8 @@ ALL = {
     "spec": lambda: bench_spec.main([]),
     # production-scale fleet simulation (ROADMAP); same guard
     "scale": lambda: bench_scale.main([]),
+    # chaos harness: kill traces, heartbeats, lane resurrection; same guard
+    "faults": lambda: bench_faults.main([]),
     # repro-lint invariants (R001-R006) over src/; see docs/INVARIANTS.md
     "lint": _lint_entry,
 }

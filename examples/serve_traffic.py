@@ -10,7 +10,14 @@ resumes token-identically on the host.  Every arrival's routing decision,
 every elastic action, and the final per-worker goodput / thermal-state
 occupancy are printed.
 
+With ``--kill-trace`` the phone doesn't merely throttle — it CRASHES
+mid-decode.  The heartbeat monitor narrates the suspect -> dead episode
+and every stranded lane's resurrection from its last checkpoint on the
+host (docs/SERVING.md, "Fault tolerance"); the summary reports deaths /
+resurrections / recompute_tokens from the snapshot.
+
     PYTHONPATH=src python examples/serve_traffic.py [fcfs|spf|priority]
+                                                    [--kill-trace]
 """
 import sys
 from pathlib import Path
@@ -26,6 +33,8 @@ from repro.configs import RunConfig, get_config, reduced_config
 from repro.hw.specs import get_profile
 from repro.models.api import build_model
 from repro.runtime.elastic import ServingElasticPolicy
+from repro.runtime.faults import make_kill_trace
+from repro.serving.failover import FailoverConfig
 from repro.serving.fleet import (ServingFleet, ThrottleTrace, WorkerSpec,
                                  drive_sim)
 from repro.serving.sampling import SamplingParams
@@ -37,7 +46,7 @@ MAX_NEW = 12
 THROTTLE_AT_S = 0.6      # phone starts ramping toward 6x slowdown here
 
 
-def main(policy: str = "fcfs"):
+def main(policy: str = "fcfs", kill: bool = False):
     cfg = dataclasses.replace(reduced_config(get_config("granite-8b")),
                               n_layers=2)
     rcfg = RunConfig(param_dtype="float32", compute_dtype="float32",
@@ -48,11 +57,20 @@ def main(policy: str = "fcfs"):
     workers = [WorkerSpec("host", get_profile("m2-max-cpu"), max_batch=3),
                WorkerSpec("phone", get_profile("iphone-11-pro"),
                           max_batch=3)]
+    # with --kill-trace the phone crashes outright instead of throttling:
+    # the heartbeat monitor declares it dead and its lanes resurrect on
+    # the host from their last checkpoint
+    trace = make_kill_trace(["phone"], 1, t0_s=THROTTLE_AT_S,
+                            t1_s=THROTTLE_AT_S + 0.01, seed=7) \
+        if kill else None
     fleet = ServingFleet(
         model, params, workers, max_len=64, tick_s=0.05,
         scheduler=SchedulerConfig(policy=policy, max_queue=16),
         policy=ServingElasticPolicy(),
-        throttle=ThrottleTrace({"phone": (THROTTLE_AT_S, 6.0, 0.15)}))
+        throttle=None if kill else ThrottleTrace(
+            {"phone": (THROTTLE_AT_S, 6.0, 0.15)}),
+        kill_trace=trace,
+        failover=FailoverConfig(checkpoint_every_s=0.25) if kill else None)
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / RATE_RPS, size=N_REQUESTS))
@@ -60,9 +78,11 @@ def main(policy: str = "fcfs"):
                             size=int(rng.integers(4, 24)))
                for _ in range(N_REQUESTS)]
 
+    fate = (f"phone CRASHES at t~{THROTTLE_AT_S}s (kill trace)" if kill
+            else f"phone throttles 6x from t={THROTTLE_AT_S}s")
     print(f"policy={policy}  offered_load={RATE_RPS:g} req/s (simulated)  "
           f"n={N_REQUESTS}  workers=host(m2-max-cpu)+phone(iphone-11-pro)  "
-          f"phone throttles 6x from t={THROTTLE_AT_S}s")
+          f"{fate}")
 
     def arrive(i: int) -> None:
         rid = fleet.submit(
@@ -74,6 +94,12 @@ def main(policy: str = "fcfs"):
               f"len={len(prompts[i]):<3d} -> {where}")
 
     drive_sim(fleet, arrivals, arrive)
+
+    if kill:
+        print("\nfailure plane (kill -> missed heartbeats -> suspect -> "
+              "dead -> lanes resurrect from checkpoint):")
+        for t, kind, name in fleet.failure_log:
+            print(f"  t={t:5.2f}s  {kind:<24s} {name}")
 
     print("\nelastic actions (duty_cycle is re-asserted every tick while "
           "hot; repeats collapsed):")
@@ -93,6 +119,11 @@ def main(policy: str = "fcfs"):
     snap = fleet.snapshot()
     print(f"\ncompleted={snap.completed}  rejected={snap.rejected}  "
           f"expired={snap.expired}  sim_time={snap.sim_t:.2f}s")
+    if kill:
+        print(f"deaths={snap.deaths}  dead_units={list(snap.dead_units)}  "
+              f"resurrections={snap.resurrections}  "
+              f"recompute_tokens={snap.recompute_tokens}  "
+              f"orphaned={snap.orphaned}  checkpoints={snap.checkpoints}")
     print(f"fleet goodput {snap.goodput_tokens_per_s:.1f} tok/s (sim)  "
           f"migrations={snap.migrations} "
           f"(requests moved: {snap.migrated_requests})  "
@@ -106,4 +137,7 @@ def main(policy: str = "fcfs"):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "fcfs")
+    argv = sys.argv[1:]
+    kill = "--kill-trace" in argv
+    rest = [a for a in argv if a != "--kill-trace"]
+    main(rest[0] if rest else "fcfs", kill=kill)

@@ -1,10 +1,44 @@
-"""Fault / throttle injection for testing the runtime (no real failures on
-a 1-CPU container; a real fleet raises the same exceptions from XLA)."""
+"""Fault / throttle injection for testing the runtime and serving planes.
+
+No real failures happen on a 1-CPU container (a real fleet raises the same
+exceptions from XLA), so faults are *injected* from seeded plans:
+
+* :class:`FaultPlan` — the training-runtime face: step-indexed worker
+  failures (raised as :class:`WorkerFailure` for the elastic trainer to
+  catch) plus per-worker thermal throttle ramps.  ``check`` is
+  **non-mutating**: a replayed seeded run sees the same failures every
+  time (``seeded_replay_check`` compatibility) — recovery bookkeeping
+  belongs to the *consumer* (the trainer remembers which failure steps it
+  already survived), not to the plan.
+
+* :class:`KillTrace` — the serving-fleet face: a seeded, time-indexed
+  schedule of worker deaths for the failure plane
+  (:mod:`repro.serving.failover`).  Three kinds model the paper's phone
+  pathologies:
+
+  - ``"crash"`` — battery death: the worker is gone for good.
+  - ``"partition"`` — network drop / iOS backgrounding: the worker keeps
+    its memory (KV cache, params) and returns after ``down_s``; if it
+    returns before the fleet's dead-threshold fires, the outage is a
+    transparent blip.
+  - ``"zombie"`` — thermal shutdown then reboot: the worker returns after
+    ``down_s`` but COLD — caches flushed, params re-warmed.
+
+:func:`make_kill_trace` draws a trace from a seeded
+``numpy.random.Generator`` (never stdlib ``random`` — repro-lint R002):
+the same seed yields the same deaths, so every chaos test and bench is a
+pure function of its seed.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import math
+from typing import Dict, Iterator, Sequence, Tuple, Union
+
+import numpy as np
+
+KILL_KINDS = ("crash", "partition", "zombie")
 
 
 class WorkerFailure(RuntimeError):
@@ -20,9 +54,16 @@ class FaultPlan:
     fail_at: Dict[int, str] = dataclasses.field(default_factory=dict)
     throttle: Dict[str, tuple] = dataclasses.field(default_factory=dict)
 
-    def check(self, step: int):
-        if step in self.fail_at:
-            raise WorkerFailure(self.fail_at.pop(step), step)
+    def check(self, step: int) -> None:
+        """Raise :class:`WorkerFailure` if a failure is planned at ``step``.
+
+        Non-mutating: checking the same step twice raises twice.  The plan
+        is a pure schedule — a seeded replay must see identical failures
+        on every run, so surviving a failure is recorded by whoever caught
+        it (see ``Trainer.run``), never by editing the plan."""
+        worker = self.fail_at.get(step)
+        if worker is not None:
+            raise WorkerFailure(worker, step)
 
     def slowdown(self, worker: str, step: int) -> float:
         """Thermal-curve multiplier (paper Fig. 6 shape: ramp to plateau)."""
@@ -31,7 +72,82 @@ class FaultPlan:
         start, factor, tau = self.throttle[worker]
         if step < start:
             return 1.0
-        import math
-
         ramp = 1.0 - math.exp(-(step - start) / max(tau, 1e-9))
         return 1.0 + (factor - 1.0) * ramp
+
+
+# ---------------------------------------------------------------------------
+# serving-plane kill traces
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KillEvent:
+    """One scheduled worker death.
+
+    ``worker`` is a fleet worker/member name (str) or a SimFleet row index
+    (int).  ``down_s`` only applies to ``partition`` / ``zombie`` — how
+    long the worker stays unreachable before returning (``inf`` = never,
+    which a ``crash`` always is)."""
+    t_s: float
+    worker: Union[str, int]
+    kind: str = "crash"
+    down_s: float = math.inf
+
+    def __post_init__(self) -> None:
+        if self.kind not in KILL_KINDS:
+            raise ValueError(f"kill kind {self.kind!r} not in {KILL_KINDS}")
+        if self.t_s < 0 or self.down_s <= 0:
+            raise ValueError(f"kill event needs t_s >= 0 and down_s > 0, "
+                             f"got t_s={self.t_s}, down_s={self.down_s}")
+
+    @property
+    def returns(self) -> bool:
+        return self.kind != "crash" and math.isfinite(self.down_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class KillTrace:
+    """A time-ordered schedule of :class:`KillEvent`; iterable, indexable,
+    and safe to share between a fleet and its reference run (frozen)."""
+    events: Tuple[KillEvent, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "events", tuple(
+            sorted(self.events, key=lambda e: (e.t_s, str(e.worker)))))
+
+    def __iter__(self) -> Iterator[KillEvent]:
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def deaths(self) -> int:
+        """Events that remove a worker for good (crashes plus kills that
+        never return)."""
+        return sum(1 for e in self.events if not e.returns)
+
+
+def make_kill_trace(workers: Sequence[Union[str, int]], n_kills: int, *,
+                    t0_s: float = 0.0, t1_s: float = 10.0, seed: int = 0,
+                    kinds: Sequence[str] = ("crash",),
+                    down_s: Tuple[float, float] = (0.5, 2.0)) -> KillTrace:
+    """Draw a seeded kill trace: ``n_kills`` distinct workers die at
+    uniform times in ``[t0_s, t1_s)`` with kinds cycled from ``kinds``
+    (deterministically shuffled), partition/zombie outages lasting uniform
+    ``down_s`` seconds.  Same seed, same trace — the chaos harness's whole
+    input is (workers, seed)."""
+    if n_kills > len(workers):
+        raise ValueError(f"cannot kill {n_kills} of {len(workers)} workers "
+                         "(each worker dies at most once per trace)")
+    for k in kinds:
+        if k not in KILL_KINDS:
+            raise ValueError(f"kill kind {k!r} not in {KILL_KINDS}")
+    rng = np.random.default_rng(seed)
+    victims = [workers[i] for i in rng.permutation(len(workers))[:n_kills]]
+    times = sorted(float(t) for t in rng.uniform(t0_s, t1_s, size=n_kills))
+    events = []
+    for t, w in zip(times, victims):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        dur = math.inf if kind == "crash" \
+            else float(rng.uniform(down_s[0], down_s[1]))
+        events.append(KillEvent(t_s=t, worker=w, kind=kind, down_s=dur))
+    return KillTrace(tuple(events))

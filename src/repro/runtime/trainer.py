@@ -52,6 +52,7 @@ class Trainer:
         self.on_metrics = on_metrics
         self.history: List[dict] = []
         self.restarts = 0
+        self._recovered: set = set()     # failure steps already survived
 
     # ------------------------------------------------------------------
     def _start_state(self):
@@ -72,6 +73,11 @@ class Trainer:
             try:
                 return self._run_once()
             except WorkerFailure as e:
+                # FaultPlan.check is non-mutating (seeded replays must see
+                # every failure); the trainer records which failure steps
+                # it already survived so a restart that resumes at or
+                # before e.step doesn't re-trip the same fault forever
+                self._recovered.add(e.step)
                 self.restarts += 1
                 print(f"[trainer] {e} — restart {self.restarts}/"
                       f"{self.cfg.max_restarts}")
@@ -85,7 +91,8 @@ class Trainer:
         losses = []
         for step in range(start, self.cfg.total_steps):
             batch = next(data)
-            self.faults.check(step)                       # injected failures
+            if step not in self._recovered:
+                self.faults.check(step)                   # injected failures
             t0 = time.perf_counter()
             params, opt, metrics = self.step_fn(params, opt, batch)
             loss = float(metrics["loss"])

@@ -267,6 +267,19 @@ class CacheBackend:
         worker that must reject it."""
         return True
 
+    def cached_prefix_tokens(self, tokens) -> int:
+        """Context positions a re-prefill of ``tokens`` would find already
+        cached HERE — the failover plane's recompute estimate when
+        resurrecting a dead worker's lane on this backend.  Zero unless
+        the layout runs a content-addressed prefix cache."""
+        return 0
+
+    def forget_cache(self) -> int:
+        """Drop reusable cached content (a zombie worker rejoins COLD
+        after a reboot: stale registrations must not be served as hits).
+        Returns entries dropped; zero where nothing is cached."""
+        return 0
+
     # capacity the admission scheduler may pack against; None = the lane
     # count is the only bound (footprints are not budget-constrained)
     @property
@@ -556,6 +569,14 @@ class PagedBackend(CacheBackend):
         bm.shared_peak = bm.shared_now
         bm.cow_splits = 0
         bm.evictions = 0
+
+    def cached_prefix_tokens(self, tokens) -> int:
+        if not self.prefix_cache or tokens is None:
+            return 0
+        return min(self.blocks.match_prefix(tokens).n_tokens, len(tokens))
+
+    def forget_cache(self) -> int:
+        return self.blocks.flush_cache()
 
     # ------------------------------------------------------------------
     # admission

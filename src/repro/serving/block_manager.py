@@ -252,6 +252,24 @@ class BlockManager:
             if not peers:
                 del self._by_parent[parent]
 
+    def flush_cache(self) -> int:
+        """Forget EVERY content registration (a zombie worker rejoining
+        after a reboot has cold memory: content-addressed hits against
+        its old registrations would serve garbage K/V).  Refcount-zero
+        cached blocks return to the plain free pool; blocks still held
+        by live lanes stay allocated but leave the match index.  Returns
+        the number of registrations dropped."""
+        dropped = 0
+        while self._free_cached:
+            b, _ = self._free_cached.popitem(last=False)
+            self._forget(b)
+            self._free_plain.append(b)
+            dropped += 1
+        for b in list(self._key_of):     # still-referenced registrations
+            self._forget(b)
+            dropped += 1
+        return dropped
+
     def uncache(self, block: int) -> None:
         """Drop a block's registration because its content is about to
         diverge (sole-holder write into a revived cached block)."""

@@ -516,6 +516,25 @@ class ServeEngine:
         self.metrics.on_preempt(req)
         return req
 
+    def forget_lane(self, slot: int) -> Request:
+        """Release a lane whose DEVICE is gone (worker death): free the
+        host-side bookkeeping without touching device state.  Unlike
+        :meth:`preempt` it snapshots nothing (the device that held the
+        state is unreachable) and registers no token content into the
+        prefix cache (K/V that died with the device must never be
+        offered as a cache hit).  Returns the request for the failover
+        plane, which restores ``saved_key`` / ``saved_state`` from its
+        last lane checkpoint before re-injecting it elsewhere."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"lane {slot} is idle: nothing to forget")
+        req.preemptions += 1
+        self.slots[slot] = None
+        self.lane_sampling.clear_lane(slot)
+        self.backend.release(slot)
+        self.metrics.on_preempt(req)
+        return req
+
     def _prepare_lanes(self) -> None:
         """Before a decode step, every active lane must have a writable
         private block at its next position (grow / COW-split / uncache —

@@ -59,6 +59,9 @@ class DecodeEngine(Protocol):
     def preempt(self, slot: int, requeue: bool = ...):
         ...
 
+    def forget_lane(self, slot: int):
+        ...
+
     def lane_cost(self, slot: int) -> Tuple[int, int]:
         ...
 

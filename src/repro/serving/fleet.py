@@ -70,6 +70,19 @@ elastic ``migrate`` action is reinterpreted for its group as
 moved layer params are charged over the link, and every lane resumes
 token-identically through the preempt/inject machinery.
 
+**Failure plane** (``kill_trace=`` / ``failover=``): workers can DIE, not
+just throttle.  A seeded :class:`~repro.runtime.faults.KillTrace`
+schedules crashes, network partitions and zombie-reboots; liveness is
+heartbeats fed from this module's existing paced telemetry (every
+executed step or paced probe beats — see
+:mod:`repro.serving.failover`), and a unit whose beats stop long enough
+is declared dead: its lanes are rolled back to their last periodic
+checkpoint and resurrected **token-identically** on survivors through
+the same preempt/inject machinery migration uses, its queued backlog
+re-routes, and nothing is ever lost (destination-less requests park and
+retry).  ``FleetSnapshot`` reports ``deaths / resurrections /
+recompute_tokens / orphaned / checkpoints``.
+
 **Speculative pairs**: a :class:`SpecPair` welds a fast draft worker to a
 slow target worker into ONE serving unit running a
 :class:`~repro.serving.speculative.SpecEngine` — the draft member
@@ -99,7 +112,10 @@ from repro.core.partition import split_decode
 from repro.hw.specs import DeviceProfile
 from repro.models.api import Model
 from repro.runtime.elastic import Action, ServingElasticPolicy
+from repro.runtime.faults import KillEvent, KillTrace
 from repro.runtime.monitor import ThermalMonitor, ThermalState
+from repro.serving.failover import (DEAD, SUSPECT, FailoverConfig,
+                                    HeartbeatMonitor, LaneCheckpoint)
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 from repro.serving.engine_api import DecodeEngine
 from repro.serving.metrics import EngineSnapshot
@@ -331,6 +347,13 @@ class FleetSnapshot:
     probes: int = 0                  # paced recovery probes across the fleet
     transfer_bytes: int = 0          # wire bytes charged (activations+recuts)
     transfer_s: float = 0.0          # sim seconds links were busy
+    # failure plane (serving/failover.py): all zero without a kill trace
+    deaths: int = 0                  # units declared DEAD by the heartbeat
+    resurrections: int = 0           # mid-flight lanes resumed elsewhere
+    recompute_tokens: int = 0        # tokens replayed by resurrections
+    orphaned: int = 0                # stranded requests with no destination
+    checkpoints: int = 0             # lane checkpoints taken
+    dead_units: Tuple[str, ...] = ()
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -512,6 +535,28 @@ class _SpecRuntime:
 _Routable = Union[_Worker, _GroupRuntime, _SpecRuntime]
 
 
+def _ctx_len_of(req: Request) -> int:
+    """Cache positions a re-prefill of ``req`` occupies (the engine's
+    ``_ctx_len``, computed fleet-side for recompute accounting)."""
+    n = len(req.prompt) + len(req.out_tokens)
+    fe = req.extra.get("frontend")
+    if fe is not None:
+        n += fe.shape[0]
+    return n
+
+
+def _cache_tokens_of(req: Request) -> Optional[np.ndarray]:
+    """Token content behind ``req``'s cache positions, or None when the
+    positions aren't pure tokens (requests with extra model inputs can
+    neither hit nor feed a prefix cache)."""
+    if req.extra:
+        return None
+    if not req.out_tokens:
+        return req.prompt
+    return np.concatenate(
+        [req.prompt, np.asarray(req.out_tokens, np.int32)])
+
+
 class ServingFleet:
     """Heterogeneous serving fleet: replica workers + stage groups.
 
@@ -537,7 +582,9 @@ class ServingFleet:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  thermal_routing: bool = True,
                  telemetry: str = "sim",
-                 probe_every_s: float = 0.25):
+                 probe_every_s: float = 0.25,
+                 kill_trace: Optional[KillTrace] = None,
+                 failover: Optional[FailoverConfig] = None):
         if not workers and not groups and not spec_pairs:
             raise ValueError(
                 "a fleet needs at least one worker, group or spec pair")
@@ -601,11 +648,68 @@ class ServingFleet:
         self.recuts = 0
         self.routing_rejected = 0    # no routable worker could queue it
         self._migrated_rids: Set[int] = set()
+        # ---- failure plane (serving/failover.py) ----------------------
+        # failover defaults ON whenever a kill trace is supplied; passing
+        # a FailoverConfig alone also arms it (heartbeats + checkpoints
+        # run even if nothing ever dies — that is their real cost)
+        self.failover = failover or (FailoverConfig()
+                                     if kill_trace is not None else None)
+        self._kill_events: List[KillEvent] = \
+            sorted(kill_trace, key=lambda e: e.t_s) if kill_trace else []
+        self._next_kill = 0
+        self._down: Dict[str, str] = {}        # unit name -> kill kind
+        self._return_at: Dict[str, float] = {}
+        self._dead: Set[str] = set()           # DETECTED dead units
+        self._suspect: Set[str] = set()
+        self._parked: List[Tuple[Request, bool, bool]] = []
+        self._parked_rids: Set[int] = set()
+        self._ckpt: Dict[int, LaneCheckpoint] = {}
+        self.deaths = 0
+        self.resurrections = 0
+        self.recompute_tokens = 0
+        self.checkpoints = 0
+        self.failure_log: List[Tuple[float, str, str]] = []
+        if self.failover is not None:
+            member_names = [p.name for p in self._all_paced()]
+            self._hb: Optional[HeartbeatMonitor] = HeartbeatMonitor(
+                member_names, probe_every_s, self.failover)
+            self._next_ckpt_s = self.failover.checkpoint_every_s
+        else:
+            self._hb = None
+            self._next_ckpt_s = math.inf
 
     def _sim_now(self) -> float:
         """The fleet's engines live on this SIM clock: queue waits and
         deadlines are simulated seconds, not host wall time."""
         return self.sim_t
+
+    def _all_paced(self) -> List[_Paced]:
+        """Every heartbeat-bearing entity: workers, group members, spec
+        members (the paced things that execute steps and answer probes)."""
+        return [*self.workers,
+                *(m for g in self.groups for m in g.members),
+                *(m for s in self.spec_pairs for m in s.members)]
+
+    def _unit_paced(self, u: _Routable) -> List[_Paced]:
+        return u.members if isinstance(u, (_GroupRuntime, _SpecRuntime)) \
+            else [u]
+
+    def _owning_unit(self, worker: str) -> Optional[_Routable]:
+        """The routable unit a kill on ``worker`` takes down: a group or
+        spec pair dies whole when any member does (a pipeline can't run
+        around a missing stage; a pair can't verify on a dead target)."""
+        if worker in self._member_group:
+            return self._member_group[worker]
+        if worker in self._member_spec:
+            return self._member_spec[worker]
+        return self._by_name.get(worker)
+
+    def _is_down(self, name: str) -> bool:
+        return name in self._down or name in self._dead
+
+    def _beat(self, name: str) -> None:
+        if self._hb is not None:
+            self._hb.beat(name, self.sim_t)
 
     def _build_group(self, model: Model, params, gspec: StageGroup,
                      max_len: int,
@@ -672,10 +776,16 @@ class ServingFleet:
         """Routable units best-first: non-drained coolest state, then
         shortest estimated backlog (queued + active work over the unit's
         cold rate), then most free backend capacity.  All-drained fleets
-        fall back to every unit — admissions queue rather than vanish."""
-        units: List[_Routable] = [*self.workers, *self.groups,
-                                  *self.spec_pairs]
-        cands = [u for u in units if u is not exclude and not u.drained]
+        fall back to every unit — admissions queue rather than vanish.
+        Units the heartbeat monitor declared DEAD are never routable;
+        SUSPECT units are avoided like drained ones (fall back only when
+        nothing healthy remains) — their lanes keep decoding, but new
+        work shouldn't bet on a worker that stopped answering."""
+        units: List[_Routable] = [u for u in (*self.workers, *self.groups,
+                                              *self.spec_pairs)
+                                  if u.name not in self._dead]
+        cands = [u for u in units if u is not exclude and not u.drained
+                 and u.name not in self._suspect]
         if not cands:
             cands = [u for u in units if u is not exclude]
 
@@ -736,6 +846,7 @@ class ServingFleet:
             u.done_count += 1
             u.done_tokens += toks
             self.completed_tokens += toks
+            self._ckpt.pop(req.rid, None)    # checkpoint no longer needed
         u.n_collected = len(done)
 
     def _observe_or_probe(self, p: _Paced, ran: bool,
@@ -759,9 +870,13 @@ class ServingFleet:
             if reading is not None:
                 self.monitor.observe(p.name, reading)
             p.next_probe_s = self.sim_t + self.probe_every_s
+            self._beat(p.name)       # executed work IS the heartbeat
             return 0.0
         if self.sim_t >= p.next_probe_s:
             p.next_probe_s = self.sim_t + self.probe_every_s
+            # a probe that reaches the worker proves liveness even when
+            # it carries no monitor reading yet (wall mode, pre-dispatch)
+            self._beat(p.name)
             if reading is None:
                 return 0.0
             p.probes += 1
@@ -1014,15 +1129,28 @@ class ServingFleet:
     def tick(self) -> None:
         """Advance simulated time by ``tick_s``: run every worker's and
         group's share of work, feed telemetry, then apply policy
-        actions."""
+        actions.  With the failure plane armed, down units are skipped
+        (a dead device executes nothing, beats nothing), the heartbeat
+        monitor is evaluated after the advance, and lane checkpoints /
+        parked-request retries run on their cadence."""
         self.sim_t += self.tick_s
         self.ticks += 1
+        if self.failover is not None:
+            self._process_returns()
+            self._process_kills()
         for w in self.workers:
-            self._advance_worker(w)
+            if not self._is_down(w.name):
+                self._advance_worker(w)
         for g in self.groups:
-            self._advance_group(g)
+            if not self._is_down(g.name):
+                self._advance_group(g)
         for s in self.spec_pairs:
-            self._advance_spec(s)
+            if not self._is_down(s.name):
+                self._advance_spec(s)
+        if self.failover is not None:
+            self._detect_failures()
+            self._checkpoint_lanes()
+            self._retry_parked()
         if self.policy is not None:
             actions = self.policy.step(self.monitor)
             # duty is re-asserted every tick while a worker is hot; a
@@ -1036,8 +1164,9 @@ class ServingFleet:
             self._apply(actions)
 
     def idle(self) -> bool:
-        return (all(not w.engine.active() and not w.engine.scheduler.depth
-                    for w in self.workers)
+        return (not self._parked
+                and all(not w.engine.active() and not w.engine.scheduler.depth
+                        for w in self.workers)
                 and all(not g.busy() for g in self.groups)
                 and all(not s.busy() for s in self.spec_pairs))
 
@@ -1055,6 +1184,216 @@ class ServingFleet:
                     f"PARTIAL results ({len(self.completed)} finished)",
                     RuntimeWarning, stacklevel=2)
         return self.completed
+
+    # ------------------------------------------------------------------
+    # failure plane: kills, heartbeats, lane resurrection
+    # ------------------------------------------------------------------
+    def _unit_backends(self, u: _Routable) -> List:
+        """Every cache backend a unit owns (pipeline: one per stage;
+        spec pair: target + draft) — the zombie cold-rejoin flush set."""
+        eng = u.engine
+        stages = getattr(eng, "stages", None)
+        if stages is not None:
+            return [st.backend for st in stages]
+        out = [eng.backend]
+        draft = getattr(eng, "draft_backend", None)
+        if draft is not None:
+            out.append(draft)
+        return out
+
+    def _process_kills(self) -> None:
+        """Apply due kill-trace events: the owning unit stops executing
+        (and beating) from this tick on.  Nothing else happens yet — the
+        fleet only learns of the death when the heartbeat gap crosses
+        the dead threshold, exactly like a real control plane."""
+        while (self._next_kill < len(self._kill_events)
+               and self._kill_events[self._next_kill].t_s <= self.sim_t):
+            ev = self._kill_events[self._next_kill]
+            self._next_kill += 1
+            unit = self._owning_unit(str(ev.worker))
+            if unit is None or self._is_down(unit.name):
+                continue
+            self._down[unit.name] = ev.kind
+            if ev.returns:
+                self._return_at[unit.name] = ev.t_s + ev.down_s
+            self.failure_log.append(
+                (self.sim_t, f"kill:{ev.kind}", unit.name))
+
+    def _process_returns(self) -> None:
+        """Bring due partition/zombie units back.  A partition that heals
+        BEFORE detection is a transparent blip: lanes and caches are
+        intact and decode just resumes.  A unit that was declared dead
+        rejoins as a fresh worker (its lanes were already resurrected
+        elsewhere); a zombie additionally rejoins COLD — its caches are
+        flushed, since reboot wiped the content behind every
+        registration.  Pacing and heartbeats restart at rejoin so banked
+        sim credit can't burst and detection doesn't instantly re-fire."""
+        due = sorted(n for n, t in self._return_at.items()
+                     if t <= self.sim_t)
+        for name in due:
+            del self._return_at[name]
+            kind = self._down.pop(name, None)
+            unit = self._by_name[name]
+            self._dead.discard(name)
+            self._suspect.discard(name)
+            if kind == "zombie":
+                for b in self._unit_backends(unit):
+                    b.forget_cache()
+            for p in self._unit_paced(unit):
+                p.acc_s = 0.0
+                p.next_probe_s = self.sim_t + self.probe_every_s
+                self._beat(p.name)
+            self.failure_log.append((self.sim_t, f"return:{kind}", name))
+
+    def _detect_failures(self) -> None:
+        """Heartbeat evaluation: a unit is DEAD when ANY member's beat
+        gap crosses the dead threshold (a pipeline can't run around a
+        missing stage), SUSPECT when any member crossed the suspect
+        threshold — routed around, lanes untouched."""
+        for u in (*self.workers, *self.groups, *self.spec_pairs):
+            if u.name in self._dead:
+                continue
+            states = [self._hb.state(p.name, self.sim_t)
+                      for p in self._unit_paced(u)]
+            if DEAD in states:
+                self._strand(u)
+            elif SUSPECT in states:
+                if u.name not in self._suspect:
+                    self._suspect.add(u.name)
+                    self.failure_log.append((self.sim_t, "suspect", u.name))
+            else:
+                self._suspect.discard(u.name)
+
+    def _strand(self, u: _Routable) -> None:
+        """Declare a unit dead and resurrect its work elsewhere: every
+        active lane is forgotten (host bookkeeping freed, NOTHING saved
+        from or registered by the unreachable device), rolled back to
+        its last checkpoint and re-injected on a survivor; the queued
+        backlog re-routes the way a drain-migration would.  Zero lost
+        requests: anything with no feasible destination parks and
+        retries every tick."""
+        self._dead.add(u.name)
+        self._suspect.discard(u.name)
+        self.deaths += 1
+        self.failure_log.append((self.sim_t, "dead", u.name))
+        eng = u.engine
+        pending = getattr(u, "pending", None)
+        if pending is not None:
+            # charge-paced units (groups / spec pairs) execute EAGERLY and
+            # only deliver when the charge queue commits in sim time.  A
+            # result whose commit was never paid was never delivered — the
+            # device died first — so those requests resurrect too, and the
+            # unpayable charges vanish with the unit.
+            for req in eng.finished[u.n_collected:]:
+                req.done_t = None
+                self._rollback_to_ckpt(req)
+                self._place(req, mid_flight=True, resurrect=True)
+            del eng.finished[u.n_collected:]
+            pending.clear()
+        for slot in range(eng.max_batch):
+            if eng.slots[slot] is None:
+                continue
+            req = eng.forget_lane(slot)
+            self._rollback_to_ckpt(req)
+            self._place(req, mid_flight=True, resurrect=True)
+        for req in eng.pull_queued():
+            # queued mid-flight requests (preempted earlier) carry valid
+            # host-side saved state — no rollback, just a new home
+            self._place(req, mid_flight=req.admitted_t is not None)
+
+    def _rollback_to_ckpt(self, req: Request) -> None:
+        """Restore a dead lane's request to its last checkpoint: tokens
+        generated after the checkpoint are replayed on the survivor from
+        the frozen PRNG counter, so the resumed stream is token-identical
+        to the unkilled one.  No checkpoint = restart from scratch (still
+        token-identical: admission re-seeds the sampling stream)."""
+        n_out = len(req.out_tokens)
+        ck = self._ckpt.get(req.rid)
+        if ck is not None:
+            del req.out_tokens[ck.out_len:]
+            req.saved_key = None if ck.key is None else ck.key.copy()
+            req.saved_state = ck.state
+        else:
+            req.out_tokens.clear()
+            req.saved_key = None
+            req.saved_state = None
+        req.fp_memo = None
+        self.recompute_tokens += n_out - len(req.out_tokens)
+
+    def _place(self, req: Request, mid_flight: bool,
+               resurrect: bool = False) -> bool:
+        """Find a surviving home for a stranded request.  Mid-flight
+        requests bypass ``max_queue`` (tokens are owed to a client) but
+        still need ``engine.feasible``; never-admitted backlog respects
+        admission control, exactly as migration does.  Returns False and
+        parks the request when nowhere fits (retried every tick)."""
+        def has_room(t: _Routable) -> bool:
+            mq = t.engine.scheduler.config.max_queue
+            return mq is None or t.engine.scheduler.depth < mq
+
+        dst = next(
+            (t for t in self._route_order()
+             if t.engine.feasible(req) and (mid_flight or has_room(t))),
+            None)
+        if dst is None:
+            self._parked.append((req, mid_flight, resurrect))
+            if req.rid not in self._parked_rids:
+                self._parked_rids.add(req.rid)
+                self.failure_log.append(
+                    (self.sim_t, "parked", f"rid={req.rid}"))
+            return False
+        self._parked_rids.discard(req.rid)
+        if mid_flight:
+            if req.saved_state is None:
+                # recompute estimate: the context re-prefill the survivor
+                # pays, minus what its prefix cache already holds
+                toks = _cache_tokens_of(req)
+                backend = getattr(dst.engine, "backend", None)
+                cached = (backend.cached_prefix_tokens(toks)
+                          if backend is not None and toks is not None else 0)
+                self.recompute_tokens += max(_ctx_len_of(req) - cached, 0)
+            self._migrated_rids.add(req.rid)
+        if resurrect:
+            self.resurrections += 1
+            self.failure_log.append(
+                (self.sim_t, "resurrect", f"rid={req.rid}->{dst.name}"))
+        elif not mid_flight:
+            self.queue_moves += 1
+        dst.engine.inject(req, force=True)
+        return True
+
+    def _checkpoint_lanes(self) -> None:
+        """Periodic lightweight lane checkpoints: per occupied lane, the
+        generated-token count, a copy of the sampler PRNG counter, and
+        the backend snapshot (free constant-size state on recurrent
+        backends; ``None`` on dense/paged, whose KV dies with the
+        device).  Host-side only — this is what resurrection runs on."""
+        if self.sim_t < self._next_ckpt_s:
+            return
+        self._next_ckpt_s = self.sim_t + self.failover.checkpoint_every_s
+        for u in (*self.workers, *self.groups, *self.spec_pairs):
+            if self._is_down(u.name):
+                continue
+            eng = u.engine
+            backend = getattr(eng, "backend", None)
+            for slot in range(eng.max_batch):
+                req = eng.slots[slot]
+                if req is None:
+                    continue
+                state = backend.snapshot(slot) if backend is not None \
+                    else None
+                self._ckpt[req.rid] = LaneCheckpoint(
+                    rid=req.rid, out_len=len(req.out_tokens),
+                    key=eng.lane_sampling.key[slot].copy(), state=state,
+                    t_s=self.sim_t)
+                self.checkpoints += 1
+
+    def _retry_parked(self) -> None:
+        if not self._parked:
+            return
+        parked, self._parked = self._parked, []
+        for req, mid, res in parked:
+            self._place(req, mid, res)
 
     # ------------------------------------------------------------------
     # elastic actions
@@ -1368,6 +1707,12 @@ class ServingFleet:
             + sum(s.frame_bytes for s in self.spec_pairs),
             transfer_s=sum(g.transfer_s for g in self.groups)
             + sum(s.transfer_s for s in self.spec_pairs),
+            deaths=self.deaths,
+            resurrections=self.resurrections,
+            recompute_tokens=self.recompute_tokens,
+            orphaned=len(self._parked),
+            checkpoints=self.checkpoints,
+            dead_units=tuple(sorted(self._dead)),
         )
 
 

@@ -379,6 +379,22 @@ class PipelineEngine:
         self.metrics.on_preempt(req)
         return req
 
+    def forget_lane(self, slot: int) -> Request:
+        """Release a lane whose device state is gone (worker death):
+        :meth:`ServeEngine.forget_lane` semantics for a split engine —
+        no snapshot (the stages' devices are unreachable), every stage's
+        lane freed, nothing registered in any cache."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"lane {slot} is idle: nothing to forget")
+        req.preemptions += 1
+        for st in self.stages:
+            st.backend.release(slot)
+        self.slots[slot] = None
+        self.lane_sampling.clear_lane(slot)
+        self.metrics.on_preempt(req)
+        return req
+
     def recut(self, cuts: Sequence[int]) -> int:
         """Re-cut the split (elastic rebalance): preempt every lane into
         the local queue (they re-admit token-identically through the new

@@ -35,6 +35,17 @@ surface the real fleet doesn't have yet:
   scale-up brings spare rows up with params charged over the link as
   warm-up seconds before they serve, scale-down drains a worker's lanes
   and queue then retires it.
+* **failure plane** — a seeded :class:`repro.runtime.faults.KillTrace`
+  marks rows dead mid-run (crash / partition / zombie).  Dead rows stop
+  earning credit immediately; after ``detect_s`` the fleet strands their
+  lanes and queue onto survivors.  Lane checkpoints (a ``lane_rem``
+  snapshot every ``ckpt_every_s``) bound the redo: a stranded lane
+  resumes from its checkpoint, charging only the tokens decoded since
+  plus a re-prefill of the prompt to ``recompute_tokens``.  Partitions
+  that heal before detection are transparent blips; zombies return cold
+  (heat, credit and warm-up reset).  All fault phases are shared code,
+  so ``impl="loop"`` and ``impl="vector"`` stay bit-identical under
+  kills.
 
 ``SimFleet`` duck-types :func:`repro.serving.fleet.drive_sim` (``sim_t`` /
 ``tick`` / ``idle`` / ``completed``), and :func:`play` drives a
@@ -45,14 +56,16 @@ the jax-backed fleet at all.
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.hw.specs import DeviceProfile
 from repro.runtime.elastic import AutoscalePolicy, FleetLoad
+from repro.runtime.faults import KillTrace
 from repro.runtime.monitor import THRESHOLDS
 from repro.serving.metrics import (OUTCOME_DONE, OUTCOME_EXPIRED,
                                    OUTCOME_REJECTED, OUTCOME_SHED, SLOClass,
@@ -134,6 +147,10 @@ class ScaleSnapshot:
     slo: SLOReport
     events: Tuple[Tuple[float, str, int], ...]
     serving_series: Tuple[int, ...]   # serving-worker count per tick
+    deaths: int = 0               # rows declared dead after detect_s
+    resurrections: int = 0        # stranded lanes resumed on survivors
+    recompute_tokens: int = 0     # redone decode + re-prefill after deaths
+    orphaned: int = 0             # stranded rids still awaiting a survivor
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -166,6 +183,9 @@ class SimFleet:
                  cool_frac: float = 0.5,
                  probe_every_s: float = 0.25,
                  warm_param_bytes: float = 0.0,
+                 kill_trace: Optional[KillTrace] = None,
+                 detect_s: float = 0.5,
+                 ckpt_every_s: float = 0.5,
                  impl: str = "vector"):
         if impl not in ("vector", "loop"):
             raise ValueError(f"impl must be 'vector' or 'loop', got {impl!r}")
@@ -188,6 +208,9 @@ class SimFleet:
         self.cool_frac = float(cool_frac)
         self.probe_every_s = float(probe_every_s)
         self.warm_param_bytes = float(warm_param_bytes)
+        self.kill_trace = kill_trace
+        self.detect_s = float(detect_s)
+        self.ckpt_every_s = float(ckpt_every_s)
 
         n = self.n
         f64 = np.float64
@@ -217,6 +240,9 @@ class SimFleet:
         self.alive[:n_start] = True
         self.retiring = np.zeros(n, bool)
         self.drained = np.zeros(n, bool)
+        # dead rows keep alive=True (a crashed worker is NOT spare capacity
+        # for _scale_up) but are masked out of earning/serving/routing
+        self.dead = np.zeros(n, bool)
         self.warm_rem = np.zeros(n, f64)   # rows start warm; scale-ups don't
         self.duty = np.ones(n, f64)
         self.heat = np.zeros(n, f64)
@@ -232,9 +258,22 @@ class SimFleet:
         self.lane_req = np.full((n, self.lmax), -1, np.int64)
         self.lane_rem = np.zeros((n, self.lmax), np.int64)
         self.queues: List[Deque[int]] = [deque() for _ in range(n)]
-        self._earning = self.alive & (self.warm_rem <= 0.0)
+        self._earning = self.alive & (self.warm_rem <= 0.0) & ~self.dead
         self._prefill_spent = np.zeros(n, f64)
         self._has_deadlines = False
+
+        # failure plane: checkpointed lane_rem, kill schedule, resume state
+        self.lane_ckpt = np.zeros((n, self.lmax), np.int64)
+        self._kill_events = list(kill_trace) if kill_trace is not None else []
+        self._next_kill = 0
+        self._detect_at: Dict[int, float] = {}
+        self._return_at: Dict[int, Tuple[float, str]] = {}
+        self._resume_rem: Dict[int, int] = {}
+        self._strand_retry: Deque[Tuple[int, bool]] = deque()
+        self._next_ckpt = self.ckpt_every_s
+        self.deaths = 0
+        self.resurrections = 0
+        self.recompute_tokens = 0
 
         # per-request records (parallel lists, index = rid)
         self.q_submit: List[float] = []
@@ -281,10 +320,12 @@ class SimFleet:
 
     def idle(self) -> bool:
         return (int(self.queue_len.sum()) == 0
-                and int(self.active_lanes.sum()) == 0)
+                and int(self.active_lanes.sum()) == 0
+                and not self._strand_retry)
 
     def _serving_mask(self) -> np.ndarray:
-        return self.alive & (self.warm_rem <= 0.0) & ~self.retiring
+        return (self.alive & (self.warm_rem <= 0.0) & ~self.retiring
+                & ~self.dead)
 
     def _ranks(self) -> np.ndarray:
         """Thermal rank per row: 0 MINIMAL, 1 FAIR, 2 SERIOUS, 3 CRITICAL
@@ -311,7 +352,8 @@ class SimFleet:
         return FleetLoad(
             sim_t=self.sim_t,
             serving=int(serving.sum()),
-            warming=int((self.alive & (self.warm_rem > 0.0)).sum()),
+            warming=int((self.alive & (self.warm_rem > 0.0)
+                         & ~self.dead).sum()),
             spare=int((~self.alive & ~self.retiring).sum()),
             queue_depth=int(self.queue_len[idx].sum()) if len(idx) else 0,
             backlog_s=float(wait.mean()) if len(idx) else 0.0,
@@ -342,7 +384,7 @@ class SimFleet:
         if deadline_s is not None:
             self._has_deadlines = True
 
-        warm = self.alive & (self.warm_rem <= 0.0)
+        warm = self.alive & (self.warm_rem <= 0.0) & ~self.dead
         room = self.queue_len < self.max_queue_arr
         open_ = warm & ~self.drained & ~self.retiring & room
         if not open_.any():
@@ -380,13 +422,19 @@ class SimFleet:
     # ------------------------------------------------------------------
     # request terminal transitions
     # ------------------------------------------------------------------
+    def _rem_total(self, rid: int) -> int:
+        """Output tokens this rid still owes: its checkpointed remainder
+        when resuming after a death, its full budget otherwise."""
+        return self._resume_rem.get(rid, self.q_max_new[rid])
+
     def _drop_expired(self, w: int, rid: int) -> None:
         self.q_status[rid] = OUTCOME_EXPIRED
         self.q_done[rid] = self.sim_t
         self.expired += 1
         self.queue_len[w] -= 1
         self.pending_prefill[w] -= self.q_prompt[rid]
-        self.pending_steps[w] -= self.q_max_new[rid]
+        self.pending_steps[w] -= self._rem_total(rid)
+        self._resume_rem.pop(rid, None)
 
     def _complete(self, rid: int) -> None:
         self.q_status[rid] = OUTCOME_DONE
@@ -412,6 +460,8 @@ class SimFleet:
     def tick(self) -> None:
         self.sim_t += self.tick_s
         self.ticks += 1
+        if self.kill_trace is not None:
+            self._process_faults()
         if self.impl == "vector":
             self._phase_rates_vector()
         else:
@@ -421,6 +471,8 @@ class SimFleet:
             self._phase_decode_vector()
         else:
             self._phase_decode_loop()
+        if self.kill_trace is not None:
+            self._checkpoint_lanes()
         if self.elastic:
             self._apply_elastic()
         if self.autoscaler is not None and self.sim_t >= self._next_autoscale:
@@ -441,7 +493,7 @@ class SimFleet:
         spend = np.where(self.alive,
                          np.minimum(self.warm_rem, self.tick_s), 0.0)
         self.warm_rem = self.warm_rem - spend
-        self._earning = self.alive & (self.warm_rem <= 0.0)
+        self._earning = self.alive & (self.warm_rem <= 0.0) & ~self.dead
         grown = np.minimum(self.credit + self.tick_s * self.duty, self._cap_s)
         self.credit = np.where(self._earning, grown, self.credit)
 
@@ -450,7 +502,8 @@ class SimFleet:
             self.slowdown[w] = 1.0 + self.heat[w] * self.s_gain[w]
             spend = min(self.warm_rem[w], self.tick_s) if self.alive[w] else 0.0
             self.warm_rem[w] = self.warm_rem[w] - spend
-            earning = bool(self.alive[w]) and self.warm_rem[w] <= 0.0
+            earning = (bool(self.alive[w]) and self.warm_rem[w] <= 0.0
+                       and not bool(self.dead[w]))
             self._earning[w] = earning
             if earning:
                 self.credit[w] = min(
@@ -480,6 +533,8 @@ class SimFleet:
                     continue
                 # prefill is charged whole at admission (may push the row
                 # into credit debt — a long prompt spans ticks)
+                rem_total = self._rem_total(rid)
+                self._resume_rem.pop(rid, None)
                 cost = (self.q_prompt[rid] * self.slowdown[w]
                         / self.prefill_rate_arr[w])
                 self.credit[w] -= cost
@@ -487,14 +542,16 @@ class SimFleet:
                 self.queue_len[w] -= 1
                 self.pending_prefill[w] -= self.q_prompt[rid]
                 self.pending_steps[w] -= 1          # first token via prefill
-                self.q_first[rid] = self.sim_t
+                if math.isnan(self.q_first[rid]):
+                    self.q_first[rid] = self.sim_t
                 self.generated_tokens += 1
-                if self.q_max_new[rid] <= 1:
+                if rem_total <= 1:
                     self._complete(rid)
                     continue
                 lane = int(np.flatnonzero(self.lane_req[w] < 0)[0])
                 self.lane_req[w, lane] = rid
-                self.lane_rem[w, lane] = self.q_max_new[rid] - 1
+                self.lane_rem[w, lane] = rem_total - 1
+                self.lane_ckpt[w, lane] = rem_total - 1
                 self.active_lanes[w] += 1
                 self.q_status[rid] = _ACTIVE
 
@@ -635,7 +692,9 @@ class SimFleet:
         self.events.append((self.sim_t, "scale_down", int(n)))
 
     def _retire_done(self) -> None:
-        done = (self.retiring & (self.active_lanes == 0)
+        # a dead retiring row must not "finish draining" into the spare
+        # pool just because its lanes were stranded elsewhere
+        done = (self.retiring & ~self.dead & (self.active_lanes == 0)
                 & (self.queue_len == 0))
         k = int(done.sum())
         if k:
@@ -644,6 +703,119 @@ class SimFleet:
             self.heat[done] = 0.0
             self.credit[done] = 0.0
             self.retired += k
+
+    # --- shared: failure plane (kills, detection, lane resurrection) --
+    def _process_faults(self) -> None:
+        # returns first, so a partition that heals before its detection
+        # deadline cancels the strand — a transparent blip
+        for w in [w for w, (t, _) in self._return_at.items()
+                  if self.sim_t >= t]:
+            _, kind = self._return_at.pop(w)
+            self.dead[w] = False
+            self._detect_at.pop(w, None)
+            if kind == "zombie":
+                # cold restart: model state gone, params re-stream
+                self.warm_rem[w] = self.warm_s_arr[w]
+                self.heat[w] = 0.0
+                self.slowdown[w] = 1.0
+            self.credit[w] = 0.0
+            self.next_probe[w] = self.sim_t + self.probe_every_s
+            self.events.append((self.sim_t, "return", int(w)))
+        while (self._next_kill < len(self._kill_events)
+               and self._kill_events[self._next_kill].t_s <= self.sim_t):
+            ev = self._kill_events[self._next_kill]
+            self._next_kill += 1
+            try:
+                w = int(ev.worker)
+            except (TypeError, ValueError):
+                continue
+            if not (0 <= w < self.n) or self.dead[w] or not self.alive[w]:
+                continue
+            self.dead[w] = True
+            self._detect_at[w] = self.sim_t + self.detect_s
+            if ev.returns:
+                self._return_at[w] = (self.sim_t + ev.down_s, ev.kind)
+            self.events.append((self.sim_t, "kill", int(w)))
+        for w in [w for w, t in self._detect_at.items() if self.sim_t >= t]:
+            self._detect_at.pop(w)
+            if self.dead[w]:
+                self._strand_row(w)
+        # orphans parked when no survivor could take them: retry each tick
+        for _ in range(len(self._strand_retry)):
+            rid, resurrect = self._strand_retry.popleft()
+            if self._expired_now(rid):
+                self.q_status[rid] = OUTCOME_EXPIRED
+                self.q_done[rid] = self.sim_t
+                self.expired += 1
+                self._resume_rem.pop(rid, None)
+                continue
+            self._fo_route(rid, resurrect=resurrect)
+
+    def _strand_row(self, w: int) -> None:
+        """Declare row ``w`` dead: roll its active lanes back to their
+        checkpoints and re-route them (plus its queue) onto survivors."""
+        self.deaths += 1
+        self.events.append((self.sim_t, "death", int(w)))
+        for lane in range(self.lmax):
+            rid = int(self.lane_req[w, lane])
+            if rid < 0:
+                continue
+            ck = int(self.lane_ckpt[w, lane])
+            rem = int(self.lane_rem[w, lane])
+            # tokens decoded since the checkpoint are redone on the
+            # destination, plus a re-prefill of the prompt
+            self.recompute_tokens += (ck - rem) + self.q_prompt[rid]
+            self.lane_req[w, lane] = -1
+            self.lane_rem[w, lane] = 0
+            self.active_lanes[w] -= 1
+            self.pending_steps[w] -= rem
+            # the checkpoint holds state after (q_max_new - ck) tokens, so
+            # ck remain; re-admission's prefill token is the first of them
+            self._resume_rem[rid] = ck
+            self.q_status[rid] = _QUEUED
+            self._fo_route(rid, resurrect=True)
+        q = self.queues[w]
+        while q:
+            rid = q.popleft()
+            self.queue_len[w] -= 1
+            self.pending_prefill[w] -= self.q_prompt[rid]
+            self.pending_steps[w] -= self._rem_total(rid)
+            self._fo_route(rid, resurrect=False)
+
+    def _fo_route(self, rid: int, *, resurrect: bool) -> None:
+        """Failover routing: same score shape as submit(), but never shed
+        by admission control — the request was already accepted once."""
+        warm = self.alive & (self.warm_rem <= 0.0) & ~self.dead
+        room = self.queue_len < self.max_queue_arr
+        open_ = warm & ~self.drained & ~self.retiring & room
+        if not open_.any():
+            open_ = warm & ~self.retiring & room
+        if not open_.any():
+            self._strand_retry.append((rid, resurrect))
+            return
+        idx = np.flatnonzero(open_)
+        pred = (self._est_wait(idx) + self.q_prompt[rid]
+                * self.slowdown[idx] / self.prefill_rate_arr[idx])
+        rank = (self._ranks()[idx] if self.thermal_routing
+                else np.zeros(len(idx), np.int64))
+        best = int(idx[np.lexsort((idx, self.queue_len[idx], pred, rank))[0]])
+        self.q_worker[rid] = best
+        self.queues[best].append(rid)
+        self.queue_len[best] += 1
+        self.pending_prefill[best] += self.q_prompt[rid]
+        self.pending_steps[best] += self._rem_total(rid)
+        if resurrect:
+            self.resurrections += 1
+            self.events.append((self.sim_t, "resurrect", int(rid)))
+
+    def _checkpoint_lanes(self) -> None:
+        """Refresh per-lane checkpoints on live rows (a dead row's state
+        is unreachable — its last pre-kill checkpoint stands)."""
+        if self.sim_t < self._next_ckpt:
+            return
+        self._next_ckpt = self.sim_t + self.ckpt_every_s
+        live = ~self.dead
+        self.lane_ckpt[live] = self.lane_rem[live]
 
     # ------------------------------------------------------------------
     def snapshot(self) -> ScaleSnapshot:
@@ -682,7 +854,10 @@ class SimFleet:
             heat_max=float(self.heat.max()),
             slo=report,
             events=tuple(self.events),
-            serving_series=tuple(self.serving_series))
+            serving_series=tuple(self.serving_series),
+            deaths=self.deaths, resurrections=self.resurrections,
+            recompute_tokens=self.recompute_tokens,
+            orphaned=len(self._strand_retry))
 
 
 def play(fleet: SimFleet, trace, *, max_ticks: int = 10_000_000) -> float:

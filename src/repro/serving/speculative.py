@@ -140,6 +140,11 @@ class SpecEngine(ServeEngine):
         self._release_draft(slot)
         return req
 
+    def forget_lane(self, slot: int) -> Request:
+        req = super().forget_lane(slot)
+        self._release_draft(slot)
+        return req
+
     # ------------------------------------------------------------------
     # draft-lane upkeep
     # ------------------------------------------------------------------

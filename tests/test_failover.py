@@ -1,0 +1,462 @@
+"""Failure plane: heartbeats, kill traces, lane resurrection, chaos runs.
+
+The jax-free half (FaultPlan, KillTrace, HeartbeatMonitor, SimFleet chaos)
+runs anywhere — select it with ``-k sim or not jax`` in lint-tier CI.  The
+jax half drives real ServingFleet engines through seeded kill traces and
+holds the repo's core claim under fire: a dead worker's requests finish
+**token-identically** on survivors.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.hw.specs import DeviceProfile
+from repro.runtime.faults import (FaultPlan, KillEvent, KillTrace,
+                                  WorkerFailure, make_kill_trace)
+from repro.runtime.guard import seeded_replay_check
+from repro.serving.failover import (ALIVE, DEAD, SUSPECT, FailoverConfig,
+                                    HeartbeatMonitor)
+from repro.serving.metrics import OUTCOME_DONE
+from repro.serving.scale import ScaleWorkerSpec, SimFleet, make_rows
+
+
+# ---------------------------------------------------------------------------
+# fault schedule primitives (jax-free)
+# ---------------------------------------------------------------------------
+def test_fault_plan_check_is_nonmutating():
+    """Regression: check() used to pop fail_at, so a seeded replay saw
+    the failure on the first run only."""
+    plan = FaultPlan(fail_at={3: "w1"})
+    for _ in range(2):
+        with pytest.raises(WorkerFailure) as ei:
+            plan.check(3)
+        assert (ei.value.worker, ei.value.step) == ("w1", 3)
+    assert plan.fail_at == {3: "w1"}
+    plan.check(2)                                # non-failure steps are free
+
+
+def test_kill_event_validation_and_returns():
+    with pytest.raises(ValueError):
+        KillEvent(t_s=1.0, worker="a", kind="meteor")
+    assert not KillEvent(t_s=1.0, worker="a", kind="crash").returns
+    assert KillEvent(t_s=1.0, worker="a", kind="partition", down_s=0.5).returns
+    assert not KillEvent(t_s=1.0, worker="a", kind="zombie",
+                         down_s=math.inf).returns
+
+
+def test_make_kill_trace_is_seeded_and_sorted():
+    workers = ["a", "b", "c", "d"]
+    t1 = make_kill_trace(workers, 3, t0_s=0.5, t1_s=4.0, seed=11,
+                         kinds=("crash", "partition", "zombie"))
+    t2 = make_kill_trace(workers, 3, t0_s=0.5, t1_s=4.0, seed=11,
+                         kinds=("crash", "partition", "zombie"))
+    assert tuple(t1) == tuple(t2) and len(t1) == 3
+    times = [e.t_s for e in t1]
+    assert times == sorted(times)
+    assert all(0.5 <= t <= 4.0 for t in times)
+    victims = [e.worker for e in t1]
+    assert len(set(victims)) == 3                # distinct victims
+    t3 = make_kill_trace(workers, 3, t0_s=0.5, t1_s=4.0, seed=12,
+                         kinds=("crash", "partition", "zombie"))
+    assert tuple(t3) != tuple(t1)
+    with pytest.raises(ValueError):
+        make_kill_trace(["a"], 2)
+
+    def mk(seed):
+        return [dataclasses.astuple(e)
+                for e in make_kill_trace(workers, 2, seed=seed)]
+    seeded_replay_check(mk, seed=5)
+
+
+def test_heartbeat_monitor_thresholds():
+    cfg = FailoverConfig(suspect_after=2.0, dead_after=4.0)
+    hb = HeartbeatMonitor(["a", "b"], probe_every_s=0.25, cfg=cfg)
+    assert hb.state("a", 0.1) == ALIVE
+    assert hb.state("a", 0.6) == SUSPECT         # gap >= 2 * 0.25
+    assert hb.state("a", 1.1) == DEAD            # gap >= 4 * 0.25
+    hb.beat("a", 1.1)
+    assert hb.state("a", 1.2) == ALIVE           # beats resurrect the state
+    assert hb.state("b", 1.1) == DEAD            # independent per worker
+
+
+def test_failover_config_validation():
+    with pytest.raises(ValueError):
+        FailoverConfig(suspect_after=4.0, dead_after=2.0)
+    with pytest.raises(ValueError):
+        FailoverConfig(checkpoint_every_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# SimFleet chaos (jax-free scale plane)
+# ---------------------------------------------------------------------------
+def _sim_profile(decode=10.0):
+    return DeviceProfile(name="sim", year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=decode,
+                         prefill_tokens_per_s=1e4,
+                         thermal_sustained=0.85, thermal_tau_s=60.0)
+
+
+def _sim_fleet(trace=None, n=4, **kw):
+    spec = ScaleWorkerSpec(profile=_sim_profile(), max_batch=4, max_queue=32)
+    kw.setdefault("tick_s", 0.05)
+    kw.setdefault("admission", False)
+    kw.setdefault("detect_s", 0.3)
+    kw.setdefault("ckpt_every_s", 0.25)
+    return SimFleet(make_rows(spec, n), kill_trace=trace, **kw)
+
+
+def _sim_chaos_run(impl="vector", seed=0, n_kills=2,
+                   kinds=("crash",), **kw):
+    trace = make_kill_trace(list(range(3)), n_kills, t0_s=0.3, t1_s=1.2,
+                            seed=seed, kinds=kinds)
+    fleet = _sim_fleet(trace, impl=impl, **kw)
+    rng = np.random.default_rng(seed + 100)
+    for _ in range(40):
+        fleet.submit(int(rng.integers(4, 30)), int(rng.integers(4, 24)))
+    while not fleet.idle() and fleet.ticks < 20000:
+        fleet.tick()
+    return fleet
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sim_crash_loses_nothing_and_bounds_recompute(seed):
+    fleet = _sim_chaos_run(seed=seed)
+    snap = fleet.snapshot()
+    assert not [r for r, st in enumerate(fleet.q_status) if st < 0]
+    assert snap.completed == snap.offered == 40
+    assert snap.deaths == 2 and snap.resurrections >= 1
+    assert snap.orphaned == 0
+    # redo per stranded lane is bounded by one checkpoint window of decode
+    # plus a prompt re-prefill (2x slack for tick granularity)
+    lanes = snap.deaths * 4
+    assert 0 < snap.recompute_tokens <= lanes * (2 * 0.25 * 10.0 + 30 + 2)
+
+
+def test_sim_loop_and_vector_identical_under_kills():
+    a = _sim_chaos_run(impl="vector", kinds=("crash", "zombie", "partition"))
+    b = _sim_chaos_run(impl="loop", kinds=("crash", "zombie", "partition"))
+    sa, sb = a.snapshot(), b.snapshot()
+    assert sa.deaths >= 1 and sa == sb
+
+
+def test_sim_partition_heal_before_detection_is_transparent():
+    trace = KillTrace(events=(
+        KillEvent(t_s=0.3, worker=0, kind="partition", down_s=0.1),))
+    fleet = _sim_fleet(trace, detect_s=0.5)
+    for _ in range(10):
+        fleet.submit(10, 12)
+    while not fleet.idle() and fleet.ticks < 20000:
+        fleet.tick()
+    snap = fleet.snapshot()
+    assert snap.completed == 10
+    assert snap.deaths == 0 and snap.resurrections == 0
+    assert snap.recompute_tokens == 0
+    kinds = [k for _, k, _ in snap.events]
+    assert "kill" in kinds and "return" in kinds and "death" not in kinds
+
+
+def test_sim_zombie_returns_cold_and_serves_again():
+    trace = KillTrace(events=(
+        KillEvent(t_s=0.2, worker=0, kind="zombie", down_s=0.5),))
+    spec = ScaleWorkerSpec(profile=_sim_profile(), max_batch=4, max_queue=32)
+    fleet = SimFleet(make_rows(spec, 2), tick_s=0.05, admission=False,
+                     kill_trace=trace, detect_s=0.1, ckpt_every_s=0.25,
+                     warm_param_bytes=1e9)
+    for _ in range(8):
+        fleet.submit(10, 10)
+    while fleet.sim_t < 0.75:
+        fleet.tick()
+    # back from the dead, but COLD: params must re-stream before serving
+    assert not fleet.dead[0] and fleet.warm_rem[0] > 0.0
+    while not fleet.idle() and fleet.ticks < 20000:
+        fleet.tick()
+    snap = fleet.snapshot()
+    assert snap.completed == 8 and snap.deaths == 1
+
+
+def test_sim_dead_rows_are_not_spare_capacity():
+    trace = KillTrace(events=(KillEvent(t_s=0.2, worker=0, kind="crash"),))
+    fleet = _sim_fleet(trace, n=4, detect_s=0.1)
+    fleet.submit(10, 10)
+    while fleet.sim_t < 0.5:
+        fleet.tick()
+    assert fleet.dead[0] and fleet.alive[0]      # dead, but NOT reusable
+    assert fleet.load().spare == 0
+    fleet._scale_up(4)                           # must not revive the corpse
+    assert fleet.dead[0] and not fleet._serving_mask()[0]
+    assert not fleet.retiring[0]
+
+
+def test_sim_all_dead_blip_parks_then_recovers():
+    trace = KillTrace(events=tuple(
+        KillEvent(t_s=0.3, worker=w, kind="partition", down_s=2.0)
+        for w in range(2)))
+    fleet = _sim_fleet(trace, n=2, detect_s=0.1)
+    for _ in range(6):
+        fleet.submit(10, 10)
+    orphan_peak = 0
+    while not fleet.idle() and fleet.ticks < 20000:
+        fleet.tick()
+        orphan_peak = max(orphan_peak, fleet.snapshot().orphaned)
+    snap = fleet.snapshot()
+    assert orphan_peak > 0                       # work parked with no home
+    assert snap.completed == 6 and snap.orphaned == 0
+    assert all(st == OUTCOME_DONE for st in fleet.q_status)
+
+
+def test_sim_chaos_run_is_seed_deterministic():
+    def run(seed):
+        return _sim_chaos_run(seed=seed,
+                              kinds=("crash", "zombie")).snapshot()
+    seeded_replay_check(run, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# ServingFleet chaos (real engines, token-identity under fire)
+# ---------------------------------------------------------------------------
+RCFG = None  # set lazily, RunConfig needs no jax but keep imports grouped
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    jax = pytest.importorskip("jax")
+    from repro.configs import RunConfig, get_config, reduced_config
+    from repro.models.api import build_model
+    cfg = dataclasses.replace(
+        reduced_config(get_config("granite-8b")), n_layers=2)
+    model = build_model(cfg, RunConfig(param_dtype="float32",
+                                       compute_dtype="float32", remat=False))
+    return model, model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def small_rnn():
+    jax = pytest.importorskip("jax")
+    from repro.configs import RunConfig, get_config, reduced_config
+    from repro.models.api import build_model
+    cfg = reduced_config(get_config("rwkv6-1.6b"))
+    model = build_model(cfg, RunConfig(param_dtype="float32",
+                                       compute_dtype="float32", remat=False))
+    return model, model.init(jax.random.key(1))
+
+
+def _profile(name, rate=20.0):
+    return DeviceProfile(name=name, year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=rate,
+                         prefill_tokens_per_s=1e9)
+
+
+def _engine_config(backend):
+    from repro.serving.engine import EngineConfig
+    if backend == "paged":
+        return EngineConfig(kv_blocks=48, kv_block_size=4)
+    return None                                  # dense / recurrent: automatic
+
+
+def _traffic(cfg, n, seed=0):
+    from repro.serving.sampling import SamplingParams
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6 + i).astype(np.int32)
+               for i in range(n)]
+    samplings = [SamplingParams(temperature=2.0, top_k=32, seed=300 + i)
+                 if i % 2 else None for i in range(n)]
+    return prompts, samplings
+
+
+def _reference(model, params, prompts, samplings, max_new=8, backend=None):
+    from repro.serving.engine import ServeEngine
+    ref = ServeEngine(model, params, max_batch=len(prompts), max_len=48,
+                      config=_engine_config(backend))
+    for p, sp in zip(prompts, samplings):
+        ref.submit(p, max_new=max_new, sampling=sp)
+    return {r.rid: r.out_tokens for r in ref.run_until_drained()}
+
+
+def _chaos_fleet(model, params, trace, *, names=("a", "b"), backend=None,
+                 failover=None):
+    from repro.serving.fleet import ServingFleet, WorkerSpec
+    workers = [WorkerSpec(n, _profile(f"dev-{n}"), max_batch=4,
+                          engine_config=_engine_config(backend))
+               for n in names]
+    return ServingFleet(model, params, workers, max_len=48, tick_s=0.05,
+                        kill_trace=trace, failover=failover)
+
+
+def _drive(fleet, prompts, samplings, max_new=8):
+    from repro.serving.fleet import drive_sim
+    arrivals = np.linspace(0.0, 0.3, len(prompts))
+    drive_sim(fleet, arrivals,
+              lambda i: fleet.submit(prompts[i], max_new=max_new,
+                                     sampling=samplings[i]))
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged", "recurrent"])
+@pytest.mark.parametrize("seed", [3, 4])
+def test_fleet_kill_is_token_identical(small_lm, small_rnn, backend, seed):
+    """The tentpole claim: kill a worker mid-decode and every request
+    still completes with EXACTLY the tokens an unkilled engine produces —
+    for dense, paged and recurrent cache layouts."""
+    model, params = small_rnn if backend == "recurrent" else small_lm
+    prompts, samplings = _traffic(model.cfg, 6, seed=seed)
+    trace = make_kill_trace(["b"], 1, t0_s=0.4, t1_s=0.6, seed=seed)
+    fleet = _chaos_fleet(model, params, trace, backend=backend)
+    _drive(fleet, prompts, samplings)
+
+    snap = fleet.snapshot()
+    assert snap.completed == len(prompts)        # zero lost requests
+    assert snap.deaths == 1 and snap.dead_units == ("b",)
+    assert snap.resurrections >= 1 and snap.orphaned == 0
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    want = _reference(model, params, prompts, samplings, backend=backend)
+    assert got == want                           # token-identical under fire
+    # no KV leak anywhere, dead engine included: forget_lane must have
+    # released every block the stranded lanes held
+    for name in ("a", "b"):
+        eng = fleet.worker(name).engine
+        if hasattr(eng.backend, "blocks"):
+            assert eng.backend.blocks.in_use == 0
+
+
+def test_fleet_two_deaths_still_drains(small_lm):
+    model, params = small_lm
+    prompts, samplings = _traffic(model.cfg, 6, seed=9)
+    trace = make_kill_trace(["b", "c"], 2, t0_s=0.4, t1_s=0.9, seed=1)
+    fleet = _chaos_fleet(model, params, trace, names=("a", "b", "c"))
+    _drive(fleet, prompts, samplings)
+    snap = fleet.snapshot()
+    assert snap.completed == len(prompts)
+    assert snap.deaths == 2 and set(snap.dead_units) == {"b", "c"}
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == _reference(model, params, prompts, samplings)
+
+
+def test_fleet_partition_blip_is_transparent(small_lm):
+    """A partition that heals inside the dead_after window is a blip:
+    no death, no resurrection, and still token-identical."""
+    model, params = small_lm
+    prompts, samplings = _traffic(model.cfg, 4, seed=5)
+    trace = KillTrace(events=(
+        KillEvent(t_s=0.4, worker="b", kind="partition", down_s=0.3),))
+    fleet = _chaos_fleet(model, params, trace,
+                         failover=FailoverConfig(dead_after=40.0,
+                                                 suspect_after=20.0))
+    _drive(fleet, prompts, samplings)
+    snap = fleet.snapshot()
+    assert snap.completed == len(prompts)
+    assert snap.deaths == 0 and snap.resurrections == 0
+    assert snap.dead_units == ()
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == _reference(model, params, prompts, samplings)
+
+
+def test_fleet_resurrection_rides_the_prefix_cache(small_lm):
+    """Satellite: when the survivor's prefix cache already holds the dead
+    lane's prompt, restart-from-scratch resurrection skips the re-prefill
+    (prefill_skipped ticks up, recompute shrinks vs a cold survivor)."""
+    from repro.serving.engine import EngineConfig
+    from repro.serving.fleet import ServingFleet, WorkerSpec
+
+    model, params = small_lm
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, model.cfg.vocab_size, size=12).astype(np.int32)
+
+    def run(prefix_cache):
+        cfg = EngineConfig(kv_blocks=48, kv_block_size=4,
+                           prefix_cache=prefix_cache)
+        workers = [WorkerSpec(n, _profile(f"dev-{n}"), max_batch=2,
+                              engine_config=cfg) for n in ("a", "b")]
+        trace = KillTrace(events=(
+            KillEvent(t_s=0.45, worker="b", kind="crash"),))
+        # checkpoints off: the stranded lane restarts from scratch, which
+        # is exactly the path the prefix cache accelerates
+        fleet = ServingFleet(model, params, workers, max_len=48,
+                             tick_s=0.05, kill_trace=trace,
+                             failover=FailoverConfig(checkpoint_every_s=1e9))
+        from repro.serving.fleet import drive_sim
+        # same prompt twice: rid 0 warms a's cache, rid 1 dies on b
+        drive_sim(fleet, np.array([0.0, 0.05]),
+                  lambda i: fleet.submit(prompt, max_new=4 if i == 0 else 16))
+        return fleet
+
+    warm = run(prefix_cache=True)
+    cold = run(prefix_cache=False)
+    for fleet in (warm, cold):
+        snap = fleet.snapshot()
+        assert snap.completed == 2 and snap.deaths == 1
+    a_warm = warm.worker("a").engine
+    assert a_warm.metrics.prefill_skipped >= 1   # cached prompt, no prefill
+    assert warm.recompute_tokens < cold.recompute_tokens
+    got = {rec.req.rid: len(rec.req.out_tokens) for rec in warm.completed}
+    assert got == {0: 4, 1: 16}
+
+
+def test_forget_lane_frees_blocks_without_feeding_the_cache(small_lm):
+    """A dead worker's device state is unreachable: forget_lane must
+    release lanes WITHOUT registering their tokens as reusable prefixes
+    (unlike preempt, which snapshots live state)."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+
+    model, params = small_lm
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, model.cfg.vocab_size, size=8).astype(np.int32)
+    eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                      config=EngineConfig(kv_blocks=32, kv_block_size=4,
+                                          prefix_cache=True))
+    eng.submit(prompt, max_new=6)
+    for _ in range(3):
+        eng.step()
+    assert eng.backend.blocks.in_use > 0
+    req = eng.forget_lane(0)
+    assert req.rid == 0 and req.preemptions == 1
+    assert eng.backend.blocks.in_use == 0        # no leak
+    # the prompt's admission-time registration is legitimate (computed
+    # while the device was alive) — but the DECODED suffix must never
+    # have been registered: that state died with the device
+    full_ctx = np.concatenate([prompt, np.asarray(req.out_tokens,
+                                                  np.int32)])
+    assert eng.backend.cached_prefix_tokens(full_ctx) <= len(prompt)
+    with pytest.raises(ValueError):
+        eng.forget_lane(0)                       # already idle
+
+
+def test_fleet_group_member_death_kills_the_unit(small_lm):
+    """A pipeline group cannot run around a missing stage: one member's
+    death strands the whole unit, and its lanes finish on the replica."""
+    from repro.serving.fleet import ServingFleet, StageGroup, WorkerSpec
+
+    model, params = small_lm
+    grp = StageGroup("pair", (WorkerSpec("s0", _profile("d0")),
+                              WorkerSpec("s1", _profile("d1"))),
+                     cuts=(1,), max_batch=2)
+    trace = KillTrace(events=(
+        KillEvent(t_s=0.4, worker="s1", kind="crash"),))
+    fleet = ServingFleet(model, params, [WorkerSpec("solo", _profile("ds"))],
+                         groups=[grp], max_len=48, tick_s=0.05,
+                         kill_trace=trace)
+    prompts, samplings = _traffic(model.cfg, 6, seed=17)
+    _drive(fleet, prompts, samplings)
+    snap = fleet.snapshot()
+    assert snap.completed == len(prompts)
+    assert snap.deaths == 1 and snap.dead_units == ("pair",)
+    got = {rec.req.rid: rec.req.out_tokens for rec in fleet.completed}
+    assert got == _reference(model, params, prompts, samplings)
+    # everything that survived the kill lives on the replica worker
+    assert all(rec.worker == "solo" for rec in fleet.completed
+               if rec.migrated)
+
+
+def test_fleet_failure_log_narrates_the_episode(small_lm):
+    model, params = small_lm
+    prompts, samplings = _traffic(model.cfg, 4, seed=23)
+    trace = KillTrace(events=(
+        KillEvent(t_s=0.4, worker="b", kind="crash"),))
+    fleet = _chaos_fleet(model, params, trace)
+    _drive(fleet, prompts, samplings)
+    kinds = [k for _, k, _ in fleet.failure_log]
+    assert kinds[0] == "kill:crash"
+    assert "dead" in kinds and "resurrect" in kinds
+    i_dead = kinds.index("dead")
+    assert "suspect" in kinds[:i_dead]           # suspicion precedes death
+    assert fleet.snapshot().checkpoints > 0
