@@ -10,10 +10,11 @@ registry without running anything — CI's cheap import-breakage smoke.
 import sys
 import traceback
 
-from benchmarks import (bench_devices, bench_faults, bench_kernels,
-                        bench_pipeline, bench_scale, bench_schedules,
-                        bench_serving, bench_spec, bench_thermal,
-                        bench_tool_parallel, bench_wire, roofline_report)
+from benchmarks import (bench_devices, bench_faults, bench_fed,
+                        bench_kernels, bench_pipeline, bench_scale,
+                        bench_schedules, bench_serving, bench_spec,
+                        bench_thermal, bench_tool_parallel, bench_wire,
+                        roofline_report)
 from repro.analysis.lint import cli as lint_cli
 
 
@@ -43,6 +44,8 @@ ALL = {
     "scale": lambda: bench_scale.main([]),
     # chaos harness: kill traces, heartbeats, lane resurrection; same guard
     "faults": lambda: bench_faults.main([]),
+    # federated serve-while-train plane (ROADMAP training item); same guard
+    "fed": lambda: bench_fed.main([]),
     # repro-lint invariants (R001-R006) over src/; see docs/INVARIANTS.md
     "lint": _lint_entry,
 }

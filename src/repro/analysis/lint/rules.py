@@ -41,6 +41,7 @@ SIM_CLOCK_SCOPES = (
     "repro/serving/",
     "repro/runtime/elastic.py",
     "repro/runtime/monitor.py",
+    "repro/runtime/trainer.py",  # clock= injected (PR 10); fed rounds run on sim time
     "repro/offload/tools.py",  # tool-loop async path; allowlisted for R002
 )
 
@@ -69,12 +70,14 @@ BACKEND_REQUIRED_ATTRS = ("name", "n_blocks", "state_version",
 SNAPSHOT_CLASSES = {
     "EngineSnapshot", "FleetSnapshot", "ScaleSnapshot", "WorkerSnapshot",
     "GroupSnapshot", "SpecSnapshot", "SLOReport", "ClassSLOReport",
+    "FedRoundSnapshot",
 }
 SNAPSHOT_METHODS = {"snapshot", "metrics_snapshot"}
 SNAPSHOT_DEFINING_MODULES = (
     "repro/serving/metrics.py",
     "repro/serving/fleet.py",
     "repro/serving/scale.py",
+    "repro/serving/train_plane.py",
 )
 
 #: ``jax.random`` callables that mint keys rather than consume them.

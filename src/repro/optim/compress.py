@@ -11,15 +11,21 @@ the pipeline/DP paths: quantise -> exchange int8+scale -> dequantise+mean.
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """-> (int8 values, fp32 scale).  scale = absmax/127 (0-safe)."""
+    """-> (int8 values, fp32 scale).  scale = absmax/127 (0-safe).
+
+    Non-finite entries (NaN / ±inf — a diverged or overflowed step) are
+    treated as zero: one bad entry must not blow the absmax scale to inf
+    (which would quantise every OTHER entry to 0 and poison the error-
+    feedback residual with NaN forever after)."""
     g32 = g.astype(jnp.float32)
+    g32 = jnp.where(jnp.isfinite(g32), g32, 0.0)
     scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
     q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
     return q, scale
@@ -29,12 +35,34 @@ def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+def compress_tree(grads: Any, error: Any,
+                  topk_frac: Optional[float] = None) -> Tuple[Any, Any, Any]:
     """Quantise (grads + error-feedback); returns (q_tree, scale_tree,
-    new_error_tree).  new_error = (g + e) - deq(q)."""
+    new_error_tree).  new_error = (g + e) - deq(q).
+
+    With ``topk_frac`` in (0, 1], only the top-k largest-magnitude entries
+    per leaf survive quantisation; the rest are zeroed BEFORE the residual
+    is taken, so error feedback carries the dropped mass into the next
+    round (sparsified SGD with memory — Stich et al. 2018).  The zeros
+    make the int8 stream highly entropy-codable on the wire.
+
+    The residual is computed from the SANITISED corrected gradient (non-
+    finite entries zeroed, matching :func:`quantize`): error feedback must
+    carry quantisation error forward, never NaN/inf — a single diverged
+    step would otherwise contaminate every future round through ``e``."""
+    if topk_frac is not None and not 0.0 < topk_frac <= 1.0:
+        raise ValueError(f"topk_frac must be in (0, 1], got {topk_frac}")
+
     def one(g, e):
         corrected = g.astype(jnp.float32) + e
-        q, s = quantize(corrected)
+        corrected = jnp.where(jnp.isfinite(corrected), corrected, 0.0)
+        kept = corrected
+        if topk_frac is not None and topk_frac < 1.0:
+            flat = jnp.abs(corrected).ravel()
+            k = max(1, int(round(topk_frac * flat.size)))
+            thr = jax.lax.top_k(flat, k)[0][-1]
+            kept = jnp.where(jnp.abs(corrected) >= thr, corrected, 0.0)
+        q, s = quantize(kept)
         new_e = corrected - dequantize(q, s)
         return q, s, new_e
 

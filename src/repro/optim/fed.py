@@ -1,0 +1,186 @@
+"""Federated aggregation: sample-weighted fed-avg over wire-framed updates.
+
+The training plane (:mod:`repro.serving.train_plane`) ships each
+participant's local model delta as ONE fed frame per round.  This module
+owns both ends of that exchange:
+
+* **Frame codec** — a magic-byte-versioned envelope around the repo's
+  tensor wire protocol (:mod:`repro.wire.codec`).  Two modes:
+
+  - ``int8_ef`` — the delta runs through :mod:`repro.optim.compress`
+    (per-leaf absmax int8 + error feedback), the ``{"q", "s"}`` pytree is
+    wire-framed, and the whole tensor stream is DEFLATE-compressed.
+    Quantised gradient deltas are heavy-tailed (most entries sit in a few
+    low int8 bins), so entropy coding stacks a further ~2x on int8's 2x —
+    that is where the bench's >= 3x-vs-bf16 wire cut comes from.
+  - ``bf16`` — the uncompressed baseline: the delta cast to bfloat16 and
+    wire-framed raw (the "bf16 all-reduce" yardstick the A/B measures
+    against).
+
+  Frame layout (little-endian)::
+
+      u8[4]  magic     b"FEDR"
+      u8     version   1
+      u8     mode      1 = int8_ef (DEFLATE payload), 2 = bf16 (raw)
+      u32    raw_len   decompressed payload length (mode 1; 0 for mode 2)
+      u8[]   payload   wire-codec pytree stream (per-tensor magic + CRC)
+
+* **Aggregation** — :func:`fed_avg` applies sample-weighted averaging in
+  FIXED sorted-participant-name order, so the reduction is bit-
+  deterministic regardless of the sim-time order deliveries landed in
+  (two seeded replays must produce the identical aggregated tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import compress
+from repro.wire import codec
+
+FED_MAGIC = b"FEDR"
+FED_VERSION = 1
+MODE_INT8_EF = 1
+MODE_BF16 = 2
+_HDR = struct.Struct("<4sBBI")   # magic, version, mode, raw_len
+
+
+class FedWireError(ValueError):
+    pass
+
+
+def _np_bf16():
+    import ml_dtypes  # ships with jax
+
+    return np.dtype(ml_dtypes.bfloat16)
+
+
+def encode_update(delta: Any, *, mode: str = "int8_ef",
+                  error: Optional[Any] = None,
+                  topk_frac: Optional[float] = 0.5) -> Tuple[bytes, Any]:
+    """Encode one participant's model delta as a fed frame.
+
+    Returns ``(frame_bytes, new_error_tree)``.  ``error`` is the
+    participant's persistent error-feedback state (``int8_ef`` mode only;
+    pass the previous round's return value, or None for round zero).
+    ``topk_frac`` sparsifies the int8 stream (error feedback carries the
+    dropped mass — see :func:`repro.optim.compress.compress_tree`); the
+    default keeps the top half, which is what pushes the DEFLATEd frame
+    past the bench's >= 3x-vs-bf16 wire gate.  ``bf16`` mode carries no
+    residual — ``new_error`` is returned unchanged so callers can thread
+    one code path."""
+    if mode == "int8_ef":
+        if error is None:
+            error = compress.init_error(delta)
+        q, s, new_error = compress.compress_tree(delta, error,
+                                                 topk_frac=topk_frac)
+        raw = codec.dumps({"q": q, "s": s})
+        payload = zlib.compress(raw, 6)
+        frame = _HDR.pack(FED_MAGIC, FED_VERSION, MODE_INT8_EF,
+                          len(raw)) + payload
+        return frame, new_error
+    if mode == "bf16":
+        bf16 = _np_bf16()
+        tree = jax.tree.map(lambda x: np.asarray(x).astype(bf16), delta)
+        payload = codec.dumps(tree)
+        frame = _HDR.pack(FED_MAGIC, FED_VERSION, MODE_BF16, 0) + payload
+        return frame, error
+    raise ValueError(f"unknown fed frame mode {mode!r}")
+
+
+def decode_update(frame: bytes) -> Any:
+    """Decode a fed frame back to a float32 delta tree (the coordinator
+    aggregates what was actually DELIVERED over the wire — dequantised
+    int8 or bf16-rounded values, never the sender's exact floats)."""
+    if len(frame) < _HDR.size:
+        raise FedWireError(f"fed frame truncated at {len(frame)} bytes")
+    magic, version, mode, raw_len = _HDR.unpack_from(frame)
+    if magic != FED_MAGIC:
+        raise FedWireError(f"bad fed magic {magic!r}")
+    if version != FED_VERSION:
+        raise FedWireError(f"unsupported fed frame version {version}")
+    payload = frame[_HDR.size:]
+    if mode == MODE_INT8_EF:
+        raw = zlib.decompress(payload)
+        if len(raw) != raw_len:
+            raise FedWireError(f"fed payload length {len(raw)} != header "
+                               f"raw_len {raw_len}")
+        tree = codec.loads(raw)
+        return compress.decompress_tree(tree["q"], tree["s"])
+    if mode == MODE_BF16:
+        tree = codec.loads(payload)
+        return jax.tree.map(lambda x: jnp.asarray(np.asarray(x),
+                                                  jnp.float32), tree)
+    raise FedWireError(f"unknown fed frame mode {mode}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientUpdate:
+    """One delivered participant contribution: who, how many samples the
+    delta was computed from, and the frame exactly as it crossed the
+    link."""
+    name: str
+    samples: int
+    frame: bytes
+
+
+def fed_avg(updates: Sequence[ClientUpdate]) -> Any:
+    """Sample-weighted average of the DELIVERED deltas, reduced in fixed
+    sorted-name order (bit-deterministic: delivery order is sim-schedule
+    dependent, the reduction must not be).  Returns None when nothing was
+    delivered — a fully-failed round applies no update."""
+    ups = sorted(updates, key=lambda u: u.name)
+    if not ups:
+        return None
+    names = [u.name for u in ups]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate participant names in round: {names}")
+    total = float(sum(u.samples for u in ups))
+    if total <= 0:
+        raise ValueError("fed_avg needs a positive total sample count")
+    acc = None
+    for u in ups:
+        delta = decode_update(u.frame)
+        w = jnp.float32(u.samples / total)
+        scaled = jax.tree.map(lambda d: d.astype(jnp.float32) * w, delta)
+        acc = scaled if acc is None else jax.tree.map(
+            lambda a, b: a + b, acc, scaled)
+    return acc
+
+
+def apply_update(params: Any, avg_delta: Any) -> Any:
+    """``params + avg_delta`` leaf-wise (cast back to each leaf's dtype)."""
+    if avg_delta is None:
+        return params
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+        params, avg_delta)
+
+
+def tree_delta(new: Any, old: Any) -> Any:
+    """``new - old`` leaf-wise in float32 (the per-round local delta)."""
+    return jax.tree.map(
+        lambda n, o: n.astype(jnp.float32) - o.astype(jnp.float32),
+        new, old)
+
+
+def frame_sizes(delta: Any) -> Tuple[int, int]:
+    """(int8_ef bytes, bf16 bytes) for one encoding of ``delta`` — the
+    wire A/B the bench reports without shipping anything."""
+    f_int8, _ = encode_update(delta, mode="int8_ef")
+    f_bf16, _ = encode_update(delta, mode="bf16")
+    return len(f_int8), len(f_bf16)
+
+
+__all__: List[str] = [
+    "FED_MAGIC", "FED_VERSION", "MODE_INT8_EF", "MODE_BF16", "FedWireError",
+    "ClientUpdate", "encode_update", "decode_update", "fed_avg",
+    "apply_update", "tree_delta", "frame_sizes",
+]

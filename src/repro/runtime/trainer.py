@@ -34,13 +34,22 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, tcfg: TrainerConfig, step_fn: Callable,
-                 init_state: Callable[[], tuple],
-                 data_iter_fn: Callable[[int], Iterator],
+                 init_state: Optional[Callable[[], tuple]] = None,
+                 data_iter_fn: Optional[Callable[[int], Iterator]] = None,
                  shardings: Any = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 on_metrics: Optional[Callable[[int, dict], None]] = None):
+                 on_metrics: Optional[Callable[[int, dict], None]] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         """init_state() -> (params, opt_state); data_iter_fn(start_step)
-        yields batches; step_fn(params, opt, batch) -> (params, opt, metrics)."""
+        yields batches; step_fn(params, opt, batch) -> (params, opt, metrics).
+
+        ``clock`` is the time source step latencies are measured on — the
+        wall clock by default, or a sim clock (e.g. a fleet's ``sim_t``
+        reader) so federated rounds driven by :mod:`repro.serving.train_plane`
+        time themselves in simulated seconds.  ``init_state`` /
+        ``data_iter_fn`` are only required by :meth:`run`; a step-driven
+        caller that owns its state and batches (the fed plane) may omit
+        them and call :meth:`train_step` directly."""
         self.cfg = tcfg
         self.step_fn = step_fn
         self.init_state = init_state
@@ -50,12 +59,37 @@ class Trainer:
         self.monitor = ThermalMonitor()
         self.ckpt = AsyncCheckpointer(Path(tcfg.ckpt_dir))
         self.on_metrics = on_metrics
+        self.clock = clock
         self.history: List[dict] = []
         self.restarts = 0
         self._recovered: set = set()     # failure steps already survived
 
     # ------------------------------------------------------------------
+    def train_step(self, params, opt, batch, step: int):
+        """One fault-checked, clock-timed, thermally-observed step — the
+        unit :meth:`run` loops over and the fed plane drives directly.
+        Returns ``(params, opt, record)``."""
+        if step not in self._recovered:
+            self.faults.check(step)                   # injected failures
+        t0 = self.clock()
+        params, opt, metrics = self.step_fn(params, opt, batch)
+        loss = float(metrics["loss"])  # repro-lint: allow[R004] the step's one deliberate loss transfer, timed as part of dt
+        dt = self.clock() - t0
+        dt *= self.faults.slowdown(self.cfg.worker_name, step)
+        ws = self.monitor.observe(self.cfg.worker_name, dt)
+        rec = dict(step=step, loss=loss, step_s=dt,
+                   thermal=ws.state.value, slowdown=round(ws.slowdown, 4))
+        self.history.append(rec)
+        if self.on_metrics:
+            self.on_metrics(step, rec)
+        return params, opt, rec
+
+    # ------------------------------------------------------------------
     def _start_state(self):
+        if self.init_state is None or self.data_iter_fn is None:
+            raise ValueError("Trainer.run() needs init_state and "
+                             "data_iter_fn; step-driven callers use "
+                             "train_step() instead")
         params, opt = self.init_state()
         start = 0
         last = latest_step(Path(self.cfg.ckpt_dir))
@@ -91,23 +125,12 @@ class Trainer:
         losses = []
         for step in range(start, self.cfg.total_steps):
             batch = next(data)
-            if step not in self._recovered:
-                self.faults.check(step)                   # injected failures
-            t0 = time.perf_counter()
-            params, opt, metrics = self.step_fn(params, opt, batch)
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
-            dt *= self.faults.slowdown(self.cfg.worker_name, step)
-            ws = self.monitor.observe(self.cfg.worker_name, dt)
+            params, opt, rec = self.train_step(params, opt, batch, step)
+            loss = rec["loss"]
             losses.append(loss)
-            rec = dict(step=step, loss=loss, step_s=dt,
-                       thermal=ws.state.value, slowdown=round(ws.slowdown, 4))
-            self.history.append(rec)
-            if self.on_metrics:
-                self.on_metrics(step, rec)
             if step % self.cfg.log_every == 0:
                 print(f"[trainer] step {step:5d} loss {loss:.4f} "
-                      f"({dt*1e3:.0f} ms, {ws.state.value})")
+                      f"({rec['step_s']*1e3:.0f} ms, {rec['thermal']})")
             if (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(step + 1,
                                      {"params": params, "opt": opt},

@@ -95,6 +95,16 @@ charged there, link charges vanish) until every member cools, when the
 ``undrain`` re-splits the pair.  ``migrate`` on the TARGET member drains
 the pair — the target holds the lanes and the big params; there is
 nowhere cheaper to verify.
+
+**Training plane** (:mod:`repro.serving.train_plane`): a
+:class:`~repro.serving.train_plane.FedRoundCoordinator` wraps the fleet
+and schedules federated training rounds into replica workers' idle
+duty-cycle gaps — local steps charged against the SAME per-tick ``acc_s``
+credit decode spends (and feeding the same thermal loop through
+``util``), update frames charged against the link, dead participants
+excluded per round through this module's failure plane.  The fleet
+itself stays training-agnostic; :meth:`ServingFleet.thermal_rank` is the
+public face the coordinator scores and preempts on.
 """
 
 from __future__ import annotations
@@ -763,6 +773,12 @@ class ServingFleet:
         ws = self.monitor.workers.get(name)
         order = list(ThermalState)
         return order.index(ws.state) if ws else 0
+
+    def thermal_rank(self, name: str) -> int:
+        """Public thermal rank of one worker: 0 MINIMAL .. 3 CRITICAL.
+        The training plane scores participant selection and preemption on
+        this without reaching into the monitor."""
+        return self._state_rank(name)
 
     def _unit_rank(self, u: _Routable) -> int:
         """A group/pair is as hot as its hottest member: one throttled

@@ -46,6 +46,15 @@ surface the real fleet doesn't have yet:
   (heat, credit and warm-up reset).  All fault phases are shared code,
   so ``impl="loop"`` and ``impl="vector"`` stay bit-identical under
   kills.
+* **training plane** — with ``fed=FedSimConfig(...)`` the fleet mirrors
+  :class:`repro.serving.train_plane.FedRoundCoordinator` at capacity
+  level: federated rounds pay cold training seconds out of the same
+  per-tick credit decode spends (serving-idle, thermally-eligible rows
+  only; preemption counted), ship one update frame per participant over
+  the row's link, heat the thermal reservoir like any busy time, and
+  compose with the failure plane (a detected-dead participant is
+  excluded from its round).  The fed phase is shared code, so loop and
+  vector stay bit-identical with training on.
 
 ``SimFleet`` duck-types :func:`repro.serving.fleet.drive_sim` (``sim_t`` /
 ``tick`` / ``idle`` / ``completed``), and :func:`play` drives a
@@ -118,6 +127,25 @@ def make_rows(spec: ScaleWorkerSpec, n: int) -> List[ScaleWorkerSpec]:
 
 
 @dataclasses.dataclass(frozen=True)
+class FedSimConfig:
+    """Capacity-level mirror of the training plane
+    (:mod:`repro.serving.train_plane`) for the jax-free SimFleet: rounds
+    of per-participant training compute charged from the SAME per-tick
+    credit decode spends — only in serving-idle, thermally-eligible ticks
+    — plus one update frame per participant charged over the link.  No
+    model math runs; the mirror keeps the *scheduling* semantics so the
+    serve-while-train SLO A/B gates at production scale."""
+    rounds: int = 4
+    participants: int = 2
+    local_steps: int = 2
+    step_tokens: int = 128          # batch * seq_len per local step
+    flops_mult: float = 3.0         # fwd+bwd+update cost vs one forward
+    frame_bytes: int = 1 << 16      # encoded update frame size
+    max_rank: int = 2               # preempt at SERIOUS or worse
+    round_timeout_s: float = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ScaleSnapshot:
     """One frozen reading of a SimFleet run.  Everything is hashable /
     equality-comparable, so determinism tests can assert two seeded runs
@@ -151,6 +179,13 @@ class ScaleSnapshot:
     resurrections: int = 0        # stranded lanes resumed on survivors
     recompute_tokens: int = 0     # redone decode + re-prefill after deaths
     orphaned: int = 0             # stranded rids still awaiting a survivor
+    fed_rounds: int = 0           # completed training rounds (fed mirror)
+    fed_deliveries: int = 0       # participant legs delivered
+    fed_excluded: int = 0         # legs excluded (death / round deadline)
+    fed_samples: int = 0          # local steps behind applied updates
+    fed_train_s: float = 0.0      # credit seconds spent on training
+    fed_wire_bytes: int = 0       # update frame bytes charged on links
+    fed_preempt_ticks: int = 0    # participant-ticks preempted by serving
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -186,6 +221,7 @@ class SimFleet:
                  kill_trace: Optional[KillTrace] = None,
                  detect_s: float = 0.5,
                  ckpt_every_s: float = 0.5,
+                 fed: Optional[FedSimConfig] = None,
                  impl: str = "vector"):
         if impl not in ("vector", "loop"):
             raise ValueError(f"impl must be 'vector' or 'loop', got {impl!r}")
@@ -229,6 +265,7 @@ class SimFleet:
         self.t_tau = np.array([r.profile.thermal_tau_s for r in rows], f64)
         self.warm_s_arr = np.array(
             [r.warm_s(self.warm_param_bytes) for r in rows], f64)
+        self.link_bw_arr = np.array([r.profile.link_bw for r in rows], f64)
         self.lmax = int(self.max_batch_arr.max())
 
         # mutable worker state (SoA)
@@ -275,6 +312,22 @@ class SimFleet:
         self.resurrections = 0
         self.recompute_tokens = 0
 
+        # training-plane mirror (shared-phase code: loop == vector)
+        self.fed = fed
+        self._fed_members: List[int] = []
+        self._fed_comp: Dict[int, float] = {}   # cold compute s remaining
+        self._fed_link: Dict[int, float] = {}   # wire s remaining
+        self._fed_done: set = set()
+        self._fed_failed: set = set()
+        self._fed_deadline = math.inf
+        self.fed_rounds = 0
+        self.fed_deliveries = 0
+        self.fed_excluded = 0
+        self.fed_samples = 0
+        self.fed_train_s = 0.0
+        self.fed_wire_bytes = 0
+        self.fed_preempt_ticks = 0
+
         # per-request records (parallel lists, index = rid)
         self.q_submit: List[float] = []
         self.q_first: List[float] = []
@@ -319,9 +372,12 @@ class SimFleet:
                 if st == OUTCOME_DONE]
 
     def idle(self) -> bool:
+        # an active training round must resolve (deliver or deadline-fail)
+        # before the fleet reads as idle — play() never cuts a round short
         return (int(self.queue_len.sum()) == 0
                 and int(self.active_lanes.sum()) == 0
-                and not self._strand_retry)
+                and not self._strand_retry
+                and not self._fed_members)
 
     def _serving_mask(self) -> np.ndarray:
         return (self.alive & (self.warm_rem <= 0.0) & ~self.retiring
@@ -471,6 +527,8 @@ class SimFleet:
             self._phase_decode_vector()
         else:
             self._phase_decode_loop()
+        if self.fed is not None:
+            self._phase_fed()
         if self.kill_trace is not None:
             self._checkpoint_lanes()
         if self.elastic:
@@ -756,6 +814,10 @@ class SimFleet:
         checkpoints and re-route them (plus its queue) onto survivors."""
         self.deaths += 1
         self.events.append((self.sim_t, "death", int(w)))
+        # a detected-dead participant is excluded from its training round
+        # (mirrors the coordinator keying exclusion on fleet._dead)
+        if w in self._fed_members and not self._fed_resolved(w):
+            self._fed_failed.add(w)
         for lane in range(self.lmax):
             rid = int(self.lane_req[w, lane])
             if rid < 0:
@@ -808,6 +870,93 @@ class SimFleet:
             self.resurrections += 1
             self.events.append((self.sim_t, "resurrect", int(rid)))
 
+    # --- shared: training-plane mirror (serve-while-train charging) ---
+    def _fed_resolved(self, w: int) -> bool:
+        return w in self._fed_done or w in self._fed_failed
+
+    def _phase_fed(self) -> None:
+        """Mirror of :class:`~repro.serving.train_plane.FedRoundCoordinator`
+        at capacity level: one active round at a time, each participant
+        paying cold training seconds out of the row's leftover per-tick
+        credit (after decode), then one update frame over its link.  Runs
+        as SHARED code after both decode phases, so loop and vector stay
+        bit-identical with the training plane on."""
+        fed = self.fed
+        if not self._fed_members and self.fed_rounds < fed.rounds:
+            ranks = self._ranks()
+            elig = (self._serving_mask() & self._earning
+                    & (ranks <= fed.max_rank) & (self.queue_len == 0)
+                    & (self.active_lanes == 0))
+            idx = np.flatnonzero(elig)
+            if len(idx):
+                # coolest-emptiest-fastest-first, same score shape as the
+                # real coordinator's participant selection
+                backlog = self.active_lanes[idx] + self.queue_len[idx]
+                order = np.lexsort((idx, -self.prefill_rate_arr[idx],
+                                    backlog, ranks[idx]))
+                picked = idx[order[:fed.participants]]
+                self._fed_members = sorted(int(w) for w in picked)
+                cold = (fed.local_steps * fed.flops_mult * fed.step_tokens)
+                for w in self._fed_members:
+                    self._fed_comp[w] = cold / self.prefill_rate_arr[w]
+                    self._fed_link[w] = 0.0
+                self._fed_done = set()
+                self._fed_failed = set()
+                self._fed_deadline = self.sim_t + fed.round_timeout_s
+        if not self._fed_members:
+            return
+        for w in self._fed_members:
+            if self._fed_resolved(w):
+                continue
+            # a down row makes no progress; detection (_strand_row) fails
+            # it, a blip that heals before detection resumes transparently
+            if self.dead[w] or not self._earning[w]:
+                continue
+            if (self.queue_len[w] > 0 or self.active_lanes[w] > 0
+                    or self._ranks()[w] > fed.max_rank):
+                self.fed_preempt_ticks += 1
+                continue
+            if self._fed_comp[w] > 0.0:
+                cost_now = self._fed_comp[w] * self.slowdown[w]
+                pay = min(cost_now, max(float(self.credit[w]), 0.0))
+                if pay > 0.0:
+                    self.credit[w] -= pay
+                    self._fed_comp[w] -= pay / self.slowdown[w]
+                    self.fed_train_s += pay
+                    du = pay / self.tick_s
+                    self.util[w] = min(self.util[w] + du, 1.0)
+                    if self._earning[w] and np.isfinite(self.t_tau[w]):
+                        # first-order heat delta of the reservoir update
+                        # for the extra util the training spend added
+                        dh = self.tick_s * du * (
+                            1.0 / self.t_tau[w]
+                            + self.heat[w] / (self.t_tau[w] * self.cool_frac))
+                        self.heat[w] = min(max(self.heat[w] + dh, 0.0), 1.0)
+                if self._fed_comp[w] <= 1e-12:
+                    self._fed_comp[w] = 0.0
+                    self.fed_wire_bytes += fed.frame_bytes
+                    self._fed_link[w] = fed.frame_bytes / self.link_bw_arr[w]
+            if self._fed_comp[w] == 0.0 and w not in self._fed_done:
+                self._fed_link[w] -= min(self._fed_link[w], self.tick_s)
+                if self._fed_link[w] <= 1e-12:
+                    self._fed_done.add(w)
+        if self.sim_t >= self._fed_deadline:
+            for w in self._fed_members:
+                if not self._fed_resolved(w):
+                    self._fed_failed.add(w)
+        if all(self._fed_resolved(w) for w in self._fed_members):
+            self.fed_rounds += 1
+            self.fed_deliveries += len(self._fed_done)
+            self.fed_excluded += len(self._fed_failed)
+            self.fed_samples += (len(self._fed_done)
+                                 * fed.local_steps * fed.step_tokens)
+            self._fed_members = []
+            self._fed_comp.clear()
+            self._fed_link.clear()
+            self._fed_done = set()
+            self._fed_failed = set()
+            self._fed_deadline = math.inf
+
     def _checkpoint_lanes(self) -> None:
         """Refresh per-lane checkpoints on live rows (a dead row's state
         is unreachable — its last pre-kill checkpoint stands)."""
@@ -857,7 +1006,14 @@ class SimFleet:
             serving_series=tuple(self.serving_series),
             deaths=self.deaths, resurrections=self.resurrections,
             recompute_tokens=self.recompute_tokens,
-            orphaned=len(self._strand_retry))
+            orphaned=len(self._strand_retry),
+            fed_rounds=self.fed_rounds,
+            fed_deliveries=self.fed_deliveries,
+            fed_excluded=self.fed_excluded,
+            fed_samples=self.fed_samples,
+            fed_train_s=round(self.fed_train_s, 9),
+            fed_wire_bytes=self.fed_wire_bytes,
+            fed_preempt_ticks=self.fed_preempt_ticks)
 
 
 def play(fleet: SimFleet, trace, *, max_ticks: int = 10_000_000) -> float:

@@ -43,6 +43,52 @@ def test_sgd_with_ef_converges_like_uncompressed():
     assert abs(run(True) - run(False)) < 1e-4
 
 
+def test_all_zero_leaf_is_exact_and_residual_free():
+    """An all-zero gradient must survive the 0-safe scale floor exactly:
+    deq == 0 bit-for-bit and the error-feedback residual stays zero."""
+    g = jnp.zeros((16, 4))
+    q, s = compress.quantize(g)
+    deq = compress.dequantize(q, s)
+    assert float(jnp.abs(deq).max()) == 0.0
+    assert np.isfinite(float(s)) and float(s) > 0.0
+    _, _, e2 = compress.compress_tree({"w": g}, compress.init_error({"w": g}))
+    assert float(jnp.abs(e2["w"]).max()) == 0.0
+
+
+def test_nonfinite_entries_do_not_poison_scale_or_residual():
+    """NaN/±inf entries quantise as zero; the scale reflects the FINITE
+    absmax and the residual stays finite (a diverged step must not wreck
+    every later round through the error-feedback state)."""
+    g = jnp.array([1.0, jnp.nan, jnp.inf, -jnp.inf, -0.25])
+    q, s = compress.quantize(g)
+    assert np.isfinite(float(s))
+    # scale from the finite absmax (1.0), not inf
+    np.testing.assert_allclose(float(s), 1.0 / 127.0, rtol=1e-6)
+    deq = np.asarray(compress.dequantize(q, s))
+    assert np.isfinite(deq).all()
+    np.testing.assert_allclose(deq[[1, 2, 3]], 0.0)
+    _, _, e2 = compress.compress_tree(g, compress.init_error(g))
+    e2 = np.asarray(e2)
+    assert np.isfinite(e2).all()
+    # next round with a clean gradient stays finite end to end
+    g2 = jnp.ones_like(g)
+    q2, s2, e3 = compress.compress_tree(g2, jnp.asarray(e2))
+    assert np.isfinite(float(s2))
+    assert np.isfinite(np.asarray(e3)).all()
+
+
+def test_dequantize_round_trip_bound_pinned():
+    """Pinned round-trip contract: |deq - g| <= absmax/254 + eps for any
+    finite input (half a quantisation step of the absmax/127 scale)."""
+    rng = np.random.default_rng(7)
+    for shape in [(64,), (8, 8), (3, 5, 7)]:
+        g = jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 10.0)
+        q, s = compress.quantize(g)
+        absmax = float(jnp.abs(g).max())
+        bound = absmax / 254.0 + 1e-6
+        assert float(jnp.abs(compress.dequantize(q, s) - g).max()) <= bound
+
+
 def test_wire_saving():
     g = {"a": jnp.zeros((1024, 64)), "b": jnp.zeros((128,))}
     bf16, int8 = compress.wire_bytes_saved(g)

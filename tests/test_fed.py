@@ -1,0 +1,319 @@
+"""Training plane: fed wire frames, fed-avg reduction, serve-while-train.
+
+The jax-free half exercises the SimFleet capacity mirror (select it with
+``-k sim or not jax`` in lint-tier CI); the jax half runs real local-SGD
+rounds through the FedRoundCoordinator and holds the plane's contracts:
+bit-deterministic aggregation under replay, serving token-identity with
+training on, and failure-plane composition (dead participants excluded,
+healed partitions contributing).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.hw.specs import DeviceProfile
+from repro.runtime.faults import KillEvent, KillTrace
+from repro.serving.metrics import SLOClass
+from repro.serving.scale import (FedSimConfig, ScaleWorkerSpec, SimFleet,
+                                 make_rows)
+
+
+# ---------------------------------------------------------------------------
+# SimFleet capacity mirror (jax-free)
+# ---------------------------------------------------------------------------
+def _sim_profile(prefill=2000.0):
+    return DeviceProfile(name="sim", year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=20.0,
+                         prefill_tokens_per_s=prefill,
+                         thermal_sustained=0.85, thermal_tau_s=60.0)
+
+
+def _sim_fleet(fed, impl="vector", n=4, kill_trace=None):
+    spec = ScaleWorkerSpec(profile=_sim_profile(), max_batch=4, max_queue=16)
+    return SimFleet(make_rows(spec, n), tick_s=0.05,
+                    slo=(SLOClass("default"),), admission=False,
+                    fed=fed, impl=impl, kill_trace=kill_trace,
+                    detect_s=0.5, ckpt_every_s=0.5)
+
+
+def _run_rounds(fleet, rounds, max_ticks=50_000):
+    while fleet.fed_rounds < rounds and fleet.ticks < max_ticks:
+        fleet.tick()
+    return fleet.snapshot()
+
+
+def test_sim_fed_rounds_complete_and_account():
+    fed = FedSimConfig(rounds=3, participants=2, local_steps=2,
+                       step_tokens=200, frame_bytes=1 << 16)
+    snap = _run_rounds(_sim_fleet(fed), 3)
+    assert snap.fed_rounds == 3
+    assert snap.fed_deliveries == 6 and snap.fed_excluded == 0
+    assert snap.fed_wire_bytes == 6 * (1 << 16)
+    assert snap.fed_samples == 6 * 2 * 200
+    # compute really was charged: at least the cold seconds of the work
+    cold = 2 * fed.flops_mult * 200 / 2000.0
+    assert snap.fed_train_s >= 6 * cold * 0.99
+
+
+def test_sim_fed_loop_vector_bit_identical():
+    fed = FedSimConfig(rounds=3, participants=2, local_steps=2,
+                       step_tokens=500, frame_bytes=1 << 18)
+    a = _run_rounds(_sim_fleet(fed, "loop"), 3)
+    b = _run_rounds(_sim_fleet(fed, "vector"), 3)
+    assert a == b
+
+
+def test_sim_fed_off_is_inert():
+    """fed=None leaves the snapshot's training fields at zero and the
+    tick stream exactly as before the training plane existed."""
+    fleet = _sim_fleet(None)
+    for _ in range(50):
+        fleet.tick()
+    snap = fleet.snapshot()
+    assert snap.fed_rounds == snap.fed_deliveries == snap.fed_excluded == 0
+    assert snap.fed_train_s == 0.0 and snap.fed_wire_bytes == 0
+    assert snap.fed_preempt_ticks == 0
+
+
+def test_sim_fed_training_heats_the_row():
+    """Training spend must feed the thermal reservoir: a row grinding fed
+    compute gets hotter than an idle one."""
+    fed = FedSimConfig(rounds=4, participants=1, local_steps=4,
+                       step_tokens=4000, frame_bytes=1 << 16)
+    hot = _sim_fleet(fed)
+    cold = _sim_fleet(None)
+    for _ in range(400):
+        hot.tick()
+        cold.tick()
+    assert hot.fed_train_s > 0
+    assert hot.snapshot().heat_max > cold.snapshot().heat_max
+
+
+def test_sim_fed_detected_kill_excludes_participant():
+    # selection ties break to the lowest rows, so 0 and 1 train; a crash
+    # on row 0 mid-round (long compute) must fail only its leg
+    fed = FedSimConfig(rounds=2, participants=2, local_steps=2,
+                       step_tokens=5_000, frame_bytes=1 << 16,
+                       round_timeout_s=120.0)
+    trace = KillTrace((KillEvent(t_s=2.0, worker=0, kind="crash",
+                                 down_s=math.inf),))
+    snap = _run_rounds(_sim_fleet(fed, kill_trace=trace), 2)
+    assert snap.fed_rounds == 2, "kill lost a round"
+    assert snap.fed_excluded >= 1
+    assert snap.fed_deliveries >= 2      # survivor + the next clean round
+    assert snap.deaths == 1
+
+
+# ---------------------------------------------------------------------------
+# fed wire frames + aggregation (jax, no fleet)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_lm():
+    jax = pytest.importorskip("jax")
+    from repro.configs import RunConfig, get_config, reduced_config
+    from repro.models.api import build_model
+    cfg = dataclasses.replace(
+        reduced_config(get_config("granite-8b")), n_layers=2)
+    model = build_model(cfg, RunConfig(param_dtype="float32",
+                                       compute_dtype="float32", remat=False))
+    return model, model.init(jax.random.key(0))
+
+
+def _delta_tree():
+    jnp = pytest.importorskip("jax.numpy")
+    rng = np.random.default_rng(3)
+    return {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+
+
+def test_fed_frame_roundtrip_int8_and_bf16():
+    pytest.importorskip("jax")
+    import jax
+    from repro.optim import fed
+    delta = _delta_tree()
+    for topk in (None, 0.5):
+        frame, err = fed.encode_update(delta, mode="int8_ef",
+                                       topk_frac=topk)
+        assert frame[:4] == fed.FED_MAGIC
+        out = fed.decode_update(frame)
+        for a, b, e in zip(jax.tree.leaves(delta), jax.tree.leaves(out),
+                           jax.tree.leaves(err)):
+            # delta = decoded + residual, by error-feedback construction
+            np.testing.assert_allclose(np.asarray(a),
+                                       np.asarray(b) + np.asarray(e),
+                                       atol=1e-6)
+    frame, _ = fed.encode_update(delta, mode="bf16")
+    out = fed.decode_update(frame)
+    for a, b in zip(jax.tree.leaves(delta), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_fed_frame_rejects_garbage():
+    pytest.importorskip("jax")
+    from repro.optim import fed
+    frame, _ = fed.encode_update(_delta_tree(), mode="int8_ef")
+    with pytest.raises(fed.FedWireError):
+        fed.decode_update(b"NOPE" + frame[4:])
+    with pytest.raises(fed.FedWireError):
+        fed.decode_update(frame[:4] + bytes([99]) + frame[5:])
+    with pytest.raises(fed.FedWireError):
+        fed.decode_update(frame[:6])
+    with pytest.raises(ValueError):
+        fed.encode_update(_delta_tree(), mode="float8")
+
+
+def test_fed_avg_is_sample_weighted_and_order_free():
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.optim import fed
+    # bf16-exact values so the weighted average is checkable in closed form
+    d1 = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    d2 = {"w": jnp.asarray([3.0, 4.0], jnp.float32)}
+    u1 = fed.ClientUpdate("a", 1, fed.encode_update(d1, mode="bf16")[0])
+    u2 = fed.ClientUpdate("b", 3, fed.encode_update(d2, mode="bf16")[0])
+    avg = fed.fed_avg([u1, u2])
+    np.testing.assert_allclose(np.asarray(avg["w"]), [2.5, 3.5], atol=1e-6)
+    rev = fed.fed_avg([u2, u1])          # delivery order must not matter
+    assert np.array_equal(np.asarray(avg["w"]), np.asarray(rev["w"]))
+    assert fed.fed_avg([]) is None
+    with pytest.raises(ValueError):
+        fed.fed_avg([u1, fed.ClientUpdate("a", 2, u1.frame)])
+    with pytest.raises(ValueError):
+        fed.fed_avg([fed.ClientUpdate("a", 0, u1.frame)])
+
+
+def test_topk_error_feedback_carries_dropped_mass():
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.optim import compress
+    g = {"w": jnp.asarray([10.0, -8.0, 0.2, -0.1], jnp.float32)}
+    e = compress.init_error(g)
+    q, s, e2 = compress.compress_tree(g, e, topk_frac=0.5)
+    qw = np.asarray(q["w"])
+    assert np.count_nonzero(qw) == 2             # only the top half survives
+    deq = np.asarray(compress.decompress_tree(q, s)["w"])
+    # the dropped entries live on, in full, inside the residual
+    np.testing.assert_allclose(np.asarray(e2["w"])[2:], [0.2, -0.1],
+                               atol=1e-5)
+    # and the kept ones round-trip up to one quantisation step
+    np.testing.assert_allclose(deq[:2], [10.0, -8.0], atol=10.0 / 127)
+
+
+# ---------------------------------------------------------------------------
+# FedRoundCoordinator on a real fleet (jax)
+# ---------------------------------------------------------------------------
+def _profile(name):
+    return DeviceProfile(name=name, year=2024, flops=1e12, mem_bytes=8e9,
+                         mem_bw=60e9, link_bw=1e9, decode_steps_per_s=20.0,
+                         prefill_tokens_per_s=2000.0)
+
+
+def _coord(model, params, rounds=2, kill_trace=None, **cfg_kw):
+    from repro.serving.failover import FailoverConfig
+    from repro.serving.fleet import ServingFleet, WorkerSpec
+    from repro.serving.train_plane import FedConfig, FedRoundCoordinator
+    workers = [WorkerSpec(n, _profile(f"dev-{n}"), max_batch=4)
+               for n in ("a", "b", "c")]
+    fleet = ServingFleet(model, params, workers, max_len=48, tick_s=0.05,
+                         kill_trace=kill_trace,
+                         failover=FailoverConfig(checkpoint_every_s=0.5)
+                         if kill_trace is not None else None)
+    fc = FedConfig(rounds=rounds, local_steps=2, participants=2, batch=2,
+                   seq_len=16, lr=0.3, seed=0, **cfg_kw)
+    return FedRoundCoordinator(fleet, model, fc)
+
+
+def test_coordinator_runs_rounds_and_loss_descends(small_lm):
+    model, params = small_lm
+    coord = _coord(model, params, rounds=3)
+    rounds = coord.run_rounds()
+    assert len(rounds) == 3 and coord.rounds_done == 3
+    assert all(len(r.delivered) == 2 for r in rounds)
+    assert rounds[-1].loss_last < rounds[0].loss_first
+    assert coord.train_s_total > 0 and coord.wire_bytes_total > 0
+    # the trained params are the coordinator's own: serving params on the
+    # fleet workers are untouched by design
+    assert rounds[0].t_end <= rounds[1].t_begin
+
+
+def test_coordinator_replay_is_bit_deterministic(small_lm):
+    import jax
+    model, params = small_lm
+    a = _coord(model, params, rounds=2)
+    b = _coord(model, params, rounds=2)
+    a.run_rounds()
+    b.run_rounds()
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert [r.delivered for r in a.rounds] == [r.delivered for r in b.rounds]
+
+
+def test_serving_tokens_identical_with_training_on(small_lm):
+    """The headline serve-while-train contract: interleaved training may
+    shift timing, never tokens."""
+    from repro.serving.fleet import drive_sim
+    model, params = small_lm
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, model.cfg.vocab_size, size=5 + i)
+               .astype(np.int32) for i in range(6)]
+    arrivals = np.linspace(0.0, 0.4, len(prompts))
+
+    def serve(target):
+        drive_sim(target, arrivals,
+                  lambda i: target.submit(prompts[i], max_new=6))
+        return {rec.req.rid: list(rec.req.out_tokens)
+                for rec in target.completed}
+
+    coord = _coord(model, params, rounds=2)
+    with_training = serve(coord)
+    baseline = serve(_coord(model, params, rounds=2).fleet)
+    assert with_training == baseline
+    assert coord.rounds_done >= 1            # training really interleaved
+
+
+def test_mid_round_kill_loses_zero_rounds(small_lm):
+    model, params = small_lm
+    trace = KillTrace((KillEvent(t_s=0.15, worker="b", kind="crash",
+                                 down_s=math.inf),))
+    coord = _coord(model, params, rounds=2, kill_trace=trace)
+    rounds = coord.run_rounds()
+    assert coord.rounds_done == 2, "mid-round kill lost a round"
+    hit = [r for r in rounds if "b" in r.excluded]
+    assert hit and all("b" not in r.delivered for r in hit)
+    # the aggregation weight covers only delivered samples
+    for r in hit:
+        assert r.samples == len(r.delivered) * coord.cfg.local_steps \
+            * coord.cfg.batch
+
+
+def test_partition_heal_before_deadline_contributes(small_lm):
+    model, params = small_lm
+    # down for 0.3 s, back well before the heartbeat declares it dead
+    # (dead_after 4 * probe 0.25 = 1 s) and before the round deadline
+    trace = KillTrace((KillEvent(t_s=0.15, worker="b", kind="partition",
+                                 down_s=0.3),))
+    coord = _coord(model, params, rounds=2, kill_trace=trace)
+    rounds = coord.run_rounds()
+    assert coord.rounds_done == 2
+    assert coord.exclusions == 0, "healed partition was excluded"
+    assert all(len(r.delivered) == 2 for r in rounds)
+
+
+def test_trainer_clock_is_injectable():
+    pytest.importorskip("jax")
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    ticks = iter([10.0, 10.5, 11.0, 11.25])
+
+    def step_fn(params, opt, batch):
+        return params, opt, {"loss": 1.5}
+
+    tr = Trainer(TrainerConfig(worker_name="w0"), step_fn,
+                 clock=lambda: next(ticks))
+    _, _, rec = tr.train_step({}, {}, None, step=0)
+    assert rec["step_s"] == pytest.approx(0.5)
+    _, _, rec = tr.train_step({}, {}, None, step=1)
+    assert rec["step_s"] == pytest.approx(0.25)
+    assert [r["loss"] for r in tr.history] == [1.5, 1.5]
